@@ -1,0 +1,50 @@
+"""Fig. 14 — independency-aware parallel execution: lane scaling and the
+effect of workload-aware scheduling.
+
+On one CPU core vmapped lanes cannot show wall-clock scaling, so the
+speedup model is the paper's own: lanes execute in parallel, a round
+finishes when its most-loaded lane finishes — speedup(L) =
+total_edges / max_lane_load(L).  Measured wall time of the multilane
+program is reported alongside as a correctness/overhead check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batch_semantic_graph
+from repro.core.multilane import build_multilane_plan, multilane_na
+from repro.graphs import build_semantic_graphs, dataset_metapaths, synthetic_hetgraph
+
+from .common import timeit
+
+
+def run(report):
+    g = synthetic_hetgraph("dblp", scale=0.12, feat_scale=0.1, seed=0)
+    sgs = build_semantic_graphs(g, dataset_metapaths("dblp"), max_edges=120_000)
+    B, H, Dh = 32, 4, 16
+    batches = [batch_semantic_graph(s, block=B) for s in sgs]
+    G = len(batches)
+    ns = batches[0].num_src
+    ns_pad = ((ns + B - 1) // B) * B
+    nd_pad = batches[0].num_dst_pad
+    rng = np.random.default_rng(0)
+    hs = jnp.asarray(np.pad(rng.standard_normal((ns, H, Dh)), ((0, ns_pad - ns), (0, 0), (0, 0))).astype(np.float32))
+    ths = jnp.asarray(rng.standard_normal((G, ns_pad, H)).astype(np.float32))
+    thd = jnp.asarray(rng.standard_normal((G, nd_pad, H)).astype(np.float32))
+
+    total = sum(b.num_edges for b in batches)
+    for lanes in (1, 2, 4, 8):
+        for balanced in (True, False):
+            plan = build_multilane_plan(batches, lanes, balanced=balanced)
+            max_load = plan.lane_plan.lane_load.max()
+            speedup = total / max(max_load, 1)
+            fn = jax.jit(lambda p: multilane_na(p, ths, thd, hs))
+            t = timeit(fn, plan, iters=2)
+            tag = "balanced" if balanced else "naive"
+            report(
+                f"lanes/dblp/L{lanes}/{tag}",
+                t * 1e6,
+                f"modeled_speedup={speedup:.2f} imbalance={plan.lane_plan.imbalance():.2f}",
+            )

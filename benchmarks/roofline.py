@@ -1,0 +1,208 @@
+"""§Roofline — three-term roofline per (arch × shape × mesh) from the
+dry-run artifacts (deliverable g).
+
+  compute term    = corrected_HLO_dot_FLOPs_per_device / 197e12   (bf16 peak)
+  memory term     = analytic HBM traffic per device / 819e9
+  collective term = corrected collective bytes per device / 50e9  (ICI)
+
+The memory term uses an explicit analytic traffic model (cost_analysis
+"bytes accessed" does not loop-correct and mixes cache levels):
+  train:  3·W/c (fwd read + bwd re-read + update write)
+        + O/c (opt-state moments+master r/w)
+        + A   (activation r/w: ~10 bytes·tokens·d·layers/c with full remat)
+  prefill: W/c + A
+  decode:  (W_active + KV)/c per token — decode reads all live weights and
+           the whole KV cache once per generated token.
+
+Also reported: MODEL_FLOPS = 6·N_act·D (train) / 2·N_act·D (inference),
+the ratio MODEL_FLOPS / corrected-HLO-FLOPs (useful-compute fraction —
+catches remat/redundancy waste), the dominant term, and the roofline
+fraction = ideal_model_time / dominant_term (the headline score).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK = 197e12
+HBM = 819e9
+ICI = 50e9
+
+
+def _bytes_per_param(cfg):
+    return 2 if cfg.param_dtype == "bfloat16" else 4
+
+
+def analytic_memory_bytes(cfg, shape, chips: int, microbatches: int = 8) -> float:
+    w = cfg.param_count() * _bytes_per_param(cfg)
+    n_act = cfg.active_param_count()
+    d, L = cfg.d_model, cfg.num_layers
+    if shape.kind == "train":
+        opt = cfg.param_count() * (4 + 2 + 2 if cfg.param_count() > 5e10 else 12)
+        tokens = shape.global_batch * shape.seq_len
+        act = 10.0 * tokens * d * L / chips  # remat: boundaries + recompute r/w
+        return 3.0 * w / chips + 2.0 * opt / chips + act
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        act = 6.0 * tokens * d * L / chips
+        return w / chips + act
+    # decode: weights (active for MoE) + full KV/state read per token
+    w_act = n_act * _bytes_per_param(cfg)
+    kv = 0.0
+    for i in range(L):
+        pat = cfg.block_pattern[i % len(cfg.block_pattern)]
+        if pat == "attn":
+            kv += 2 * shape.seq_len * cfg.num_kv_heads * cfg.head_dim * 2
+        elif pat == "local":
+            kv += 2 * min(shape.seq_len, cfg.window or shape.seq_len) * cfg.num_kv_heads * cfg.head_dim * 2
+        elif pat == "ssm":
+            kv += cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+        elif pat == "rglru":
+            kv += (cfg.rnn_width or d) * 4
+    if cfg.is_encoder_decoder:
+        kv += L * 2 * shape.seq_len * cfg.num_kv_heads * cfg.head_dim * 2  # self
+        kv += L * 2 * cfg.encoder_seq * cfg.num_kv_heads * cfg.head_dim * 2  # cross
+    kv *= shape.global_batch
+    return (w_act + kv) / chips
+
+
+def analytic_residency_bytes(cfg, shape, chips: int, microbatches: int = 8) -> float:
+    """Peak HBM residency per chip with TPU-native dtypes.
+
+    ``memory_analysis`` on the CPU dry-run backend over-reports bf16 cells:
+    XLA:CPU hoists bf16->f32 converts of whole parameter/cache stacks out
+    of the loop (no native bf16 on CPU), materializing an extra f32 copy
+    that does not exist on TPU (verified in the grok decode HLO — see
+    EXPERIMENTS.md §Dry-run notes).  This model is the TPU-side budget:
+      train:   params + opt state + f32 grads + remat boundary stack + ws
+      prefill: params + boundary-free activations + logits shard + ws
+      decode:  params + KV/state cache (k+v, both buffers during update)
+    """
+    bpp = _bytes_per_param(cfg)
+    w = cfg.param_count() * bpp / chips
+    d, L = cfg.d_model, cfg.num_layers
+    data_shards = 32 if chips == 512 else 16
+    ws = 1.5e9  # transient working set (einsum blocks, sharded)
+    if shape.kind == "train":
+        if cfg.param_count() > 5e10:  # factored optimizer, no master
+            opt = cfg.param_count() * 0.02 * 4
+        else:
+            mom = 2 if cfg.param_count() > 5e10 else 4
+            master = 4 if cfg.param_dtype == "bfloat16" else 0
+            opt = cfg.param_count() * (2 * mom + master)
+        grads = cfg.param_count() * 4
+        mb_tokens = shape.global_batch * shape.seq_len / max(microbatches, 1)
+        boundaries = L * (mb_tokens / data_shards) * d * 2
+        return w + (opt + grads) / chips + boundaries + ws
+    if shape.kind == "prefill":
+        toks = shape.global_batch * shape.seq_len / data_shards
+        logits = toks * ((cfg.vocab_size + 255) // 256 * 256) / 16 * 2 / max(shape.global_batch / data_shards, 1)
+        act = toks * d * 4 * 2  # few live layers' activations, bf16+f32 stats
+        return w + act + min(logits, 2e9) + ws
+    # decode
+    kv = 0.0
+    for i in range(L):
+        pat = cfg.block_pattern[i % len(cfg.block_pattern)]
+        if pat == "attn":
+            kv += 2 * shape.seq_len * cfg.num_kv_heads * cfg.head_dim * 2
+        elif pat == "local":
+            kv += 2 * min(shape.seq_len, cfg.window or shape.seq_len) * cfg.num_kv_heads * cfg.head_dim * 2
+        elif pat == "ssm":
+            kv += cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4 + 3 * (cfg.d_inner + 2 * cfg.ssm_state) * 2
+        elif pat == "rglru":
+            kv += (cfg.rnn_width or d) * 4
+    if cfg.is_encoder_decoder:
+        kv += L * 2 * (shape.seq_len + cfg.encoder_seq) * cfg.num_kv_heads * cfg.head_dim * 2
+    kv *= shape.global_batch
+    shards = 1
+    if shape.global_batch % data_shards == 0 and shape.global_batch >= data_shards:
+        shards *= data_shards           # batch over data
+    shards *= 16                        # cache length over model (seq-sharded)
+    return w + 2 * kv / shards + ws     # ×2: input + donated output buffer
+
+
+def term_sentence(dom: str, cfg, shape) -> str:
+    if dom == "collective":
+        return "shard/schedule to cut TP all-reduces (sequence parallelism, bf16 cotangents, comm/compute overlap)"
+    if dom == "memory":
+        if shape.kind == "decode":
+            return "decode is KV/weight-streaming bound: quantize KV, widen batch, or multi-query the cache"
+        return "raise arithmetic intensity: bigger microbatches, less remat, fuse elementwise chains"
+    return "compute-bound: reduce remat recompute and keep MXU-aligned shapes"
+
+
+def load_cells(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def compute_terms(cell: dict) -> dict | None:
+    if cell.get("status") != "ok" or "arch" not in cell:
+        return None  # skipped cells and non-LM artifacts (hgnn_multilane)
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    chips = cell["chips"]
+    mb = cell.get("microbatches", 8)
+    compute_s = cell["hlo_stats"]["dot_flops_per_device"] / PEAK
+    memory_s = analytic_memory_bytes(cfg, shape, chips, mb) / HBM
+    coll_s = sum(cell["hlo_stats"]["collective_bytes"].values()) / ICI
+    ideal_s = cell["model_flops"] / (chips * PEAK)
+    dom = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", coll_s),
+        key=lambda kv: kv[1],
+    )[0]
+    bound = max(compute_s, memory_s, coll_s)
+    return dict(
+        arch=cell["arch"],
+        shape=cell["shape"],
+        mesh=cell["mesh"],
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        ideal_s=ideal_s,
+        dominant=dom,
+        roofline_fraction=ideal_s / bound if bound else 0.0,
+        useful_compute=cell["model_flops"] / max(cell["hlo_stats"]["dot_flops_per_device"] * chips, 1.0),
+        mem_gib=cell["memory"]["per_device_total"] / 2**30,
+        mem_fit_gib=analytic_residency_bytes(cfg, shape, chips, mb) / 2**30,
+        fix=term_sentence(dom, cfg, shape),
+    )
+
+
+def run(report):
+    cells = load_cells()
+    n_ok = n_skip = 0
+    for cell in cells:
+        if cell.get("status") == "skipped":
+            n_skip += 1
+            continue
+        t = compute_terms(cell)
+        if t is None:
+            continue
+        n_ok += 1
+        report(
+            f"roofline/{t['arch']}/{t['shape']}/{t['mesh']}",
+            t["ideal_s"] * 1e6,
+            f"compute={t['compute_s']:.3g}s memory={t['memory_s']:.3g}s "
+            f"collective={t['collective_s']:.3g}s dom={t['dominant']} "
+            f"frac={t['roofline_fraction']:.3f} useful={t['useful_compute']:.2f} "
+            f"mem={t['mem_gib']:.1f}GiB",
+        )
+    report("roofline/summary", 0.0, f"ok_cells={n_ok} skipped_cells={n_skip}")
+    # §Perf optimized variants (recorded separately from the baseline)
+    for cell in load_cells("artifacts/optimized"):
+        t = compute_terms(cell)
+        if t is None:
+            continue
+        report(
+            f"roofline_optimized/{t['arch']}/{t['shape']}/{t['mesh']}",
+            t["ideal_s"] * 1e6,
+            f"compute={t['compute_s']:.3g}s collective={t['collective_s']:.3g}s "
+            f"frac={t['roofline_fraction']:.3f} [{cell.get('optimization', '')}]",
+        )

@@ -1,0 +1,54 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  breakdown/*        — Fig. 2  execution-time breakdown (FP/NA/SF)
+  fusion/*           — Fig. 13 bound-aware stage fusion vs staged
+  lanes/*            — Fig. 14 lane scaling + workload-aware scheduling
+  similarity/*       — Fig. 15 similarity-aware scheduling (DRAM fetch)
+  kernel/*           — kernel-level backends (fused online-softmax NA)
+  roofline/*         — §Roofline terms per (arch × shape × mesh), from
+                       the dry-run artifacts (run launch/dryrun first)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .common import row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-list of bench names")
+    args = ap.parse_args()
+
+    from . import breakdown, fusion_ablation, kernels_bench, lanes, roofline, similarity, stage_roofline
+
+    benches = {
+        "breakdown": breakdown.run,
+        "fusion": fusion_ablation.run,
+        "lanes": lanes.run,
+        "similarity": similarity.run,
+        "kernels": kernels_bench.run,
+        "stage_roofline": stage_roofline.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        benches = {k: v for k, v in benches.items() if k in keep}
+
+    failures = 0
+    for name, fn in benches.items():
+        try:
+            fn(row)
+        except Exception:
+            failures += 1
+            print(f"{name},0.0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benches failed")
+
+
+if __name__ == "__main__":
+    main()

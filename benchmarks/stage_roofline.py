@@ -1,0 +1,89 @@
+"""Table 3 / Fig. 3 — per-stage arithmetic intensity and execution bound.
+
+The paper profiles HAN-on-DBLP CUDA kernels: the FP sgemm has AI
+26.8 FLOP/B (compute-bound, above the T4 ridge), the NA SpMMCsr has AI
+0.49 FLOP/B (memory-bound).  We reproduce the *classification* for the
+TPU target by compiling each stage in isolation and reading
+``cost_analysis`` (flops, bytes accessed): AI = flops/bytes, compared
+with the v5e ridge point 197e12/819e9 ≈ 240 FLOP/B (bf16) or the paper's
+fp32-style ridge using fp32 ops.  The NA stage lands orders of magnitude
+below the FP stage — the paper's core observation, and the reason its
+stage fusion pairs them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import stages
+from repro.graphs import build_semantic_graph, synthetic_hetgraph, to_padded_edges
+
+RIDGE_V5E = 197e12 / 819e9  # ≈ 240 FLOP/byte (bf16 MXU)
+RIDGE_T4 = 8.1e12 / 300e9    # ≈ 27 FLOP/byte (the paper's Fig. 3 ridge)
+
+
+def _ai(fn, *args):
+    c = jax.jit(fn).lower(*args).compile()
+    cost = c.cost_analysis() or {}
+    fl = float(cost.get("flops", 0.0))
+    by = float(cost.get("bytes accessed", 1.0))
+    return fl, by, fl / max(by, 1.0)
+
+
+def run(report):
+    g = synthetic_hetgraph("dblp", scale=0.25, feat_scale=0.5, seed=0)
+    sg = build_semantic_graph(g, ("author", "paper", "author"), max_edges=300_000)
+    pe = to_padded_edges(sg)
+    rng = np.random.default_rng(0)
+    d_in = g.feature_dim("author")
+    H, Dh = 8, 64
+    x = jnp.asarray(rng.standard_normal((sg.num_src, d_in)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((d_in, H * Dh)).astype(np.float32))
+    b = jnp.zeros((H * Dh,))
+    a_s = jnp.asarray(rng.standard_normal((H, Dh)).astype(np.float32))
+    a_d = jnp.asarray(rng.standard_normal((H, Dh)).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((sg.num_src, H, Dh)).astype(np.float32))
+    th_s = jnp.asarray(rng.standard_normal((sg.num_src, H)).astype(np.float32))
+    th_d = jnp.asarray(rng.standard_normal((sg.num_dst, H)).astype(np.float32))
+    src, dst, valid = jnp.asarray(pe.src), jnp.asarray(pe.dst), jnp.asarray(pe.valid)
+
+    # FP stage (dense GEMM — the paper's sgemm)
+    fl, by, ai = _ai(lambda x_: stages.feature_projection(x_, w, b), x)
+    report("stage_roofline/FP", 0.0,
+           f"AI={ai:.1f}FLOP/B T4bound={'compute' if ai > RIDGE_T4 else 'memory'} "
+           f"v5ebound={'compute' if ai > RIDGE_V5E else 'memory'} flops={fl:.3g}")
+    ai_fp = ai
+
+    # NA stage (segment softmax aggregation — the paper's SpMMCsr)
+    fl, by, ai = _ai(
+        lambda t1, t2, h_: stages.segment_softmax_aggregate(
+            src, dst, valid, t1, t2, h_, sg.num_dst
+        ),
+        th_s, th_d, h,
+    )
+    report("stage_roofline/NA", 0.0,
+           f"AI={ai:.1f}FLOP/B T4bound={'compute' if ai > RIDGE_T4 else 'memory'} "
+           f"v5ebound={'compute' if ai > RIDGE_V5E else 'memory'} flops={fl:.3g}")
+    ai_na = ai
+
+    # SF stage (semantic attention: gemm + elementwise + reduce)
+    z = jnp.asarray(rng.standard_normal((3, sg.num_dst, H * Dh)).astype(np.float32))
+    w_g = jnp.asarray(rng.standard_normal((H * Dh, 128)).astype(np.float32))
+    q = jnp.asarray(rng.standard_normal((128,)).astype(np.float32))
+
+    def sf(z_):
+        valid_v = jnp.ones((sg.num_dst,), bool)
+        w_p = jnp.stack([
+            stages.local_semantic_fusion(z_[p], w_g, jnp.zeros((128,)), q, valid_v)
+            for p in range(3)
+        ])
+        fused, _ = stages.global_semantic_fusion(w_p, z_)
+        return fused
+
+    fl, by, ai = _ai(sf, z)
+    report("stage_roofline/SF", 0.0,
+           f"AI={ai:.1f}FLOP/B T4bound={'compute' if ai > RIDGE_T4 else 'memory'} "
+           f"v5ebound={'compute' if ai > RIDGE_V5E else 'memory'} flops={fl:.3g}")
+    # the paper's headline: FP's AI is orders of magnitude above NA's
+    report("stage_roofline/ratio", 0.0, f"AI_FP/AI_NA={ai_fp/max(ai_na,1e-9):.1f}x (paper: 26.8/0.49=55x)")

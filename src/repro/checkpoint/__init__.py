@@ -1,0 +1,3 @@
+from .io import save_checkpoint, restore_checkpoint, latest_step, reshard_to
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "reshard_to"]

@@ -1,0 +1,96 @@
+"""Checkpointing: atomic, manifest-driven, elastic.
+
+Layout: <dir>/step_<n>/ with one .npy per leaf (keyed by the flattened
+tree path) and a manifest.json describing the tree, shapes, dtypes and
+auxiliary state (data-pipeline counters).  Writes go to a tmp dir +
+os.replace — a crash mid-write never corrupts the latest checkpoint
+(fault-tolerance contract, tests/test_train).
+
+Elastic restart: leaves are stored as *logical* (unsharded) arrays, so a
+checkpoint written on one mesh restores onto any other mesh/topology —
+``reshard_to`` device_puts with the new shardings (tests cover a 1-device
+round-trip through a differently-sharded jit).
+
+On a real multi-host pod each host writes its addressable shards and the
+manifest records the global shape; the single-process layout here is the
+degenerate case of that design.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = ["/".join(str(p) for p in path) for path, _ in flat]
+    vals = [v for _, v in flat]
+    return keys, vals, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state, aux: dict | None = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    keys, vals, _ = _flatten(state)
+    manifest = {"step": step, "aux": aux or {}, "leaves": []}
+    for i, (k, v) in enumerate(zip(keys, vals)):
+        if v is None:
+            manifest["leaves"].append({"key": k, "file": None})
+            continue
+        arr = np.asarray(v)
+        fname = f"leaf_{i}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": k, "file": fname, "dtype": str(arr.dtype), "shape": list(arr.shape)}
+        )
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like) -> tuple[object, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays/None)."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    keys, vals, treedef = _flatten(like)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    out = []
+    for k, v in zip(keys, vals):
+        leaf = by_key[k]
+        if leaf["file"] is None:
+            out.append(None)
+            continue
+        arr = np.load(os.path.join(path, leaf["file"]))
+        out.append(arr)
+    state = jax.tree_util.tree_unflatten(treedef, out)
+    return state, manifest["aux"]
+
+
+def reshard_to(state, shardings):
+    """Elastic restart: place a (host) state onto a new mesh layout."""
+    return jax.tree_util.tree_map(
+        lambda x, s: x if x is None else jax.device_put(x, s), state, shardings
+    )

@@ -1,0 +1,177 @@
+"""Bound-aware stage fusion — execution paths for the NA stage (paper §4.1).
+
+Three interchangeable NA backends with identical semantics:
+
+* ``SEGMENT``  — two-pass segment softmax over a padded edge list.  This is
+  the *staged baseline*: it mirrors the GPU framework's SpMM-style pass
+  structure (materialize per-edge logits, reduce max, exponentiate, reduce
+  sum, weighted SpMM).
+* ``BLOCK``    — pure-jnp block-CSR online softmax (numerator/denominator
+  accumulated simultaneously — the paper's softmax decomposition, Fig. 6).
+* ``KERNEL``   — the Pallas TPU kernel (kernels/seg_gat_agg): the fused
+  FP->theta->NA->LSF hardware datapath expressed as VMEM-tiled MXU work.
+  ``KERNEL_INTERPRET`` runs the same kernel body in interpret mode (CPU).
+
+Stage fusion proper — running FP, theta, NA, LSF inside *one* compiled
+program instead of one program per stage — is expressed at the model level
+(models/hgnn): `fused=True` jits the whole layer, `fused=False` runs each
+stage as its own jitted program with host barriers between them, mirroring
+Fig. 4(a) vs 4(b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.formats import to_block_csr, to_padded_edges
+from ..graphs.hetgraph import SemanticGraph
+from . import stages
+
+
+class NABackend(enum.Enum):
+    SEGMENT = "segment"
+    BLOCK = "block"
+    KERNEL = "kernel"
+    KERNEL_INTERPRET = "kernel_interpret"
+
+
+@dataclasses.dataclass
+class SemanticGraphBatch:
+    """Device-resident formats for one semantic graph."""
+
+    name: str
+    src_type: str
+    dst_type: str
+    num_src: int
+    num_dst: int
+    num_edges: int
+    path_types: tuple[str, ...]
+    # padded edge list (SEGMENT backend)
+    src: jnp.ndarray | None = None
+    dst: jnp.ndarray | None = None
+    valid: jnp.ndarray | None = None
+    # block CSR (BLOCK / KERNEL backends)
+    col_index: jnp.ndarray | None = None
+    masks: jnp.ndarray | None = None
+    block: int = 128
+
+    @property
+    def num_dst_pad(self) -> int:
+        if self.col_index is None:
+            return self.num_dst
+        return int(self.col_index.shape[0]) * self.block
+
+    def row_edge_counts(self) -> np.ndarray:
+        """#edges per dst-block row (workload units for lane scheduling)."""
+        assert self.masks is not None
+        return np.asarray(self.masks.sum(axis=(1, 2, 3)), np.int64)
+
+
+_SGB_ARRAY_FIELDS = ("src", "dst", "valid", "col_index", "masks")
+_SGB_META_FIELDS = (
+    "name", "src_type", "dst_type", "num_src", "num_dst", "num_edges", "path_types", "block",
+)
+
+
+def _sgb_flatten(b: "SemanticGraphBatch"):
+    children = tuple(getattr(b, f) for f in _SGB_ARRAY_FIELDS)
+    aux = tuple(getattr(b, f) for f in _SGB_META_FIELDS)
+    return children, aux
+
+
+def _sgb_unflatten(aux, children):
+    kw = dict(zip(_SGB_META_FIELDS, aux))
+    kw.update(dict(zip(_SGB_ARRAY_FIELDS, children)))
+    return SemanticGraphBatch(**kw)
+
+
+jax.tree_util.register_pytree_node(SemanticGraphBatch, _sgb_flatten, _sgb_unflatten)
+
+
+def batch_semantic_graph(
+    sg: SemanticGraph,
+    *,
+    block: int = 128,
+    with_edges: bool = True,
+    with_blocks: bool = True,
+    edge_pad: int | None = None,
+) -> SemanticGraphBatch:
+    kw: dict = {}
+    if with_edges:
+        pe = to_padded_edges(sg, pad_to=edge_pad)
+        kw.update(
+            src=jnp.asarray(pe.src), dst=jnp.asarray(pe.dst), valid=jnp.asarray(pe.valid)
+        )
+    if with_blocks:
+        bc = to_block_csr(sg, block=block)
+        kw.update(col_index=jnp.asarray(bc.col_index), masks=jnp.asarray(bc.masks), block=block)
+    return SemanticGraphBatch(
+        name=sg.name,
+        src_type=sg.src_type,
+        dst_type=sg.dst_type,
+        num_src=sg.num_src,
+        num_dst=sg.num_dst,
+        num_edges=sg.num_edges,
+        path_types=sg.path_types,
+        **kw,
+    )
+
+
+def _pad_rows(x: jnp.ndarray, n: int) -> jnp.ndarray:
+    if x.shape[0] == n:
+        return x
+    assert x.shape[0] < n
+    pad = [(0, n - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+def neighbor_aggregate(
+    batch: SemanticGraphBatch,
+    theta_src: jnp.ndarray,  # [Ns, H]
+    theta_dst: jnp.ndarray,  # [Nd, H]
+    h_src: jnp.ndarray,      # [Ns, H, Dh]
+    *,
+    backend: NABackend = NABackend.SEGMENT,
+    leaky_slope: float = 0.2,
+    edge_bias: jnp.ndarray | float = 0.0,
+) -> jnp.ndarray:
+    """Attention NA with the chosen backend.  Returns [num_dst, H, Dh]."""
+    if backend is NABackend.SEGMENT:
+        assert batch.src is not None, "batch built without edge list"
+        return stages.segment_softmax_aggregate(
+            batch.src, batch.dst, batch.valid, theta_src, theta_dst, h_src,
+            batch.num_dst, leaky_slope=leaky_slope, edge_bias=edge_bias,
+        )
+
+    assert batch.col_index is not None, "batch built without block CSR"
+    ns_pad = ((batch.num_src + batch.block - 1) // batch.block) * batch.block
+    th_s = _pad_rows(theta_src, ns_pad)
+    hs = _pad_rows(h_src, ns_pad)
+    th_d = _pad_rows(theta_dst, batch.num_dst_pad)
+
+    if backend is NABackend.BLOCK:
+        out = stages.block_softmax_aggregate(
+            batch.col_index, batch.masks, th_s, th_d, hs,
+            leaky_slope=leaky_slope, edge_bias=edge_bias,
+        )
+    else:
+        from ..kernels import ops as kops
+
+        out = kops.seg_gat_agg(
+            batch.col_index, batch.masks, th_s, th_d, hs,
+            leaky_slope=leaky_slope, edge_bias=edge_bias,
+            interpret=backend is NABackend.KERNEL_INTERPRET,
+        )
+    return out[: batch.num_dst]
+
+
+def mean_aggregate(
+    batch: SemanticGraphBatch, h_src: jnp.ndarray
+) -> jnp.ndarray:
+    """Mean NA (R-GCN).  Returns [num_dst, ...]."""
+    assert batch.src is not None
+    return stages.segment_mean_aggregate(batch.src, batch.dst, batch.valid, h_src, batch.num_dst)

@@ -1,0 +1,207 @@
+"""Independency-aware parallel execution (paper §4.2) — multi-lane NA.
+
+Work units are (semantic graph, dst-block row) pairs: each dst vertex
+lives in exactly one unit, so units are embarrassingly parallel until the
+GSF barrier, exactly the independency the paper exploits.  Units are
+assigned to lanes by the workload-aware scheduler (scheduling.py); lanes
+execute as a vmapped axis on one chip or as a `shard_map` mesh axis across
+chips — "adding hardware resources to further improve performance"
+(paper §4.2.1) becomes adding devices to the lane axis.
+
+All units share one static shape (W block slots, padded with -1 columns),
+so lane execution is a single dense program regardless of how irregular
+the semantic graphs are — the TPU answer to the crossbar/scheduler
+machinery of the accelerator.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fusion import SemanticGraphBatch
+from .scheduling import LanePlan, lane_assignment, naive_lane_assignment
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass
+class MultiLanePlan:
+    """Static multi-lane execution plan (device arrays).
+
+    Shapes: L lanes × U units/lane (padded) × W block slots × B×B masks.
+    """
+
+    col_index: jnp.ndarray  # int32 [L, U, W]
+    masks: jnp.ndarray      # bool  [L, U, W, B, B]
+    graph_id: jnp.ndarray   # int32 [L, U]
+    dst_row: jnp.ndarray    # int32 [L, U]
+    valid: jnp.ndarray      # bool  [L, U]
+    block: int
+    num_graphs: int
+    n_dst_blocks: int       # per graph (shared dst space)
+    lane_plan: LanePlan | None  # host-side scheduling metadata (not traced)
+
+    @property
+    def num_lanes(self) -> int:
+        return int(self.col_index.shape[0])
+
+
+def _flatten_unflatten():
+    arr = ("col_index", "masks", "graph_id", "dst_row", "valid")
+    # lane_plan holds host-side numpy arrays (scheduling metadata); it must
+    # NOT ride in the pytree aux (aux must be hashable) — reconstructed
+    # copies carry None there, which multilane_na never reads.
+    meta = ("block", "num_graphs", "n_dst_blocks")
+
+    def fl(p):
+        return tuple(getattr(p, f) for f in arr), tuple(getattr(p, f) for f in meta)
+
+    def unfl(aux, children):
+        kw = dict(zip(meta, aux))
+        kw.update(dict(zip(arr, children)))
+        return MultiLanePlan(lane_plan=None, **kw)
+
+    jax.tree_util.register_pytree_node(MultiLanePlan, fl, unfl)
+
+
+_flatten_unflatten()
+
+
+def build_multilane_plan(
+    batches: list[SemanticGraphBatch],
+    num_lanes: int,
+    *,
+    balanced: bool = True,
+    threshold: float | None = None,
+) -> MultiLanePlan:
+    """Partition the block rows of all semantic graphs onto lanes.
+
+    Requires all graphs to share the dst/src vertex space (HAN's metapath
+    graphs do); col widths are padded to the max across graphs.
+    """
+    assert batches, "no semantic graphs"
+    b = batches[0].block
+    n_rows = int(batches[0].col_index.shape[0])
+    for bb in batches:
+        assert bb.block == b and int(bb.col_index.shape[0]) == n_rows
+
+    row_costs = [bb.row_edge_counts() for bb in batches]
+    plan = (
+        lane_assignment(row_costs, num_lanes, threshold=threshold)
+        if balanced
+        else naive_lane_assignment(row_costs, num_lanes)
+    )
+
+    w_max = max(int(bb.col_index.shape[1]) for bb in batches)
+    lanes_units: list[list[int]] = [[] for _ in range(num_lanes)]
+    for u in range(plan.unit_graph.shape[0]):
+        lanes_units[int(plan.unit_lane[u])].append(u)
+    u_max = max(1, max(len(lu) for lu in lanes_units))
+
+    col = np.full((num_lanes, u_max, w_max), -1, np.int32)
+    masks = np.zeros((num_lanes, u_max, w_max, b, b), bool)
+    gid = np.zeros((num_lanes, u_max), np.int32)
+    drow = np.zeros((num_lanes, u_max), np.int32)
+    valid = np.zeros((num_lanes, u_max), bool)
+    for l, lu in enumerate(lanes_units):
+        for j, u in enumerate(lu):
+            g = int(plan.unit_graph[u])
+            r = int(plan.unit_row[u])
+            wg = int(batches[g].col_index.shape[1])
+            col[l, j, :wg] = np.asarray(batches[g].col_index[r])
+            masks[l, j, :wg] = np.asarray(batches[g].masks[r])
+            gid[l, j] = g
+            drow[l, j] = r
+            valid[l, j] = True
+    return MultiLanePlan(
+        col_index=jnp.asarray(col),
+        masks=jnp.asarray(masks),
+        graph_id=jnp.asarray(gid),
+        dst_row=jnp.asarray(drow),
+        valid=jnp.asarray(valid),
+        block=b,
+        num_graphs=len(batches),
+        n_dst_blocks=n_rows,
+        lane_plan=plan,
+    )
+
+
+def _unit_na(
+    cols: jnp.ndarray,   # [W]
+    mrow: jnp.ndarray,   # [W, B, B]
+    gid: jnp.ndarray,    # scalar
+    drow: jnp.ndarray,   # scalar
+    theta_src: jnp.ndarray,  # [G, Ns_pad, H]
+    theta_dst: jnp.ndarray,  # [G, Nd_pad, H]
+    h_src: jnp.ndarray,      # [Ns_pad, H, Dh]
+    edge_bias: jnp.ndarray,  # [G, H]
+    leaky_slope: float,
+) -> jnp.ndarray:
+    b = mrow.shape[-1]
+    h_dim, dh = theta_src.shape[-1], h_src.shape[-1]
+    th_d = jax.lax.dynamic_slice(
+        theta_dst, (gid, drow * b, 0), (1, b, h_dim)
+    )[0]  # [B, H]
+    bias = edge_bias[gid]  # [H]
+
+    def step(carry, inp):
+        m_run, l_run, acc = carry
+        c, mask = inp
+        c_safe = jnp.maximum(c, 0)
+        th_s = jax.lax.dynamic_slice(theta_src, (gid, c_safe * b, 0), (1, b, h_dim))[0]
+        hs = jax.lax.dynamic_slice_in_dim(h_src, c_safe * b, b, 0)
+        logits = jax.nn.leaky_relu(
+            th_d[:, None, :] + th_s[None, :, :] + bias, leaky_slope
+        )
+        live = mask[:, :, None] & (c >= 0)
+        logits = jnp.where(live, logits, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(logits, axis=1))
+        scale = jnp.exp(m_run - m_new)
+        p = jnp.where(live, jnp.exp(logits - m_new[:, None, :]), 0.0)
+        l_new = l_run * scale + p.sum(axis=1)
+        acc_new = acc * scale[:, :, None] + jnp.einsum("dsh,shf->dhf", p, hs)
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, h_dim), NEG_INF, h_src.dtype),
+        jnp.zeros((b, h_dim), h_src.dtype),
+        jnp.zeros((b, h_dim, dh), h_src.dtype),
+    )
+    (m_f, l_f, acc_f), _ = jax.lax.scan(step, init, (cols, mrow))
+    return acc_f / jnp.maximum(l_f, 1e-9)[:, :, None]  # [B, H, Dh]
+
+
+def multilane_na(
+    plan: MultiLanePlan,
+    theta_src: jnp.ndarray,  # [G, Ns_pad, H]
+    theta_dst: jnp.ndarray,  # [G, Nd_pad, H]
+    h_src: jnp.ndarray,      # [Ns_pad, H, Dh]
+    *,
+    edge_bias: jnp.ndarray | None = None,  # [G, H]
+    leaky_slope: float = 0.2,
+) -> jnp.ndarray:
+    """Run NA for all semantic graphs across lanes.
+
+    Returns z [G, Nd_pad, H, Dh].  vmap over (lanes, units); swap the
+    outer vmap for `shard_map` over a `lane` mesh axis for multi-chip
+    execution (launch/hgnn_dryrun does exactly that).
+    """
+    g_n, _, h_dim = theta_src.shape
+    dh = h_src.shape[-1]
+    if edge_bias is None:
+        edge_bias = jnp.zeros((g_n, h_dim), h_src.dtype)
+
+    unit_fn = lambda c, m, g, r: _unit_na(
+        c, m, g, r, theta_src, theta_dst, h_src, edge_bias, leaky_slope
+    )
+    per_lane = jax.vmap(jax.vmap(unit_fn))(
+        plan.col_index, plan.masks, plan.graph_id, plan.dst_row
+    )  # [L, U, B, H, Dh]
+
+    out = jnp.zeros((g_n, plan.n_dst_blocks, plan.block, h_dim, dh), h_src.dtype)
+    contrib = jnp.where(plan.valid[:, :, None, None, None], per_lane, 0.0)
+    out = out.at[plan.graph_id, plan.dst_row].add(contrib)
+    return out.reshape(g_n, plan.n_dst_blocks * plan.block, h_dim, dh)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, hgnn_minibatches
+
+__all__ = ["SyntheticLMData", "hgnn_minibatches"]

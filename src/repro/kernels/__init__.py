@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the compute hot-spots HiHGNN optimizes:
+
+* seg_gat_agg      — fused NA: block-sparse online-softmax aggregation
+                     (the paper's stage-fusion datapath + softmax
+                     decomposition, Fig. 6/7)
+* fused_fp_coeff   — FP fused with attention-coefficient computation
+                     (paper Alg. 2 lines 7-8)
+* flash_attention  — the same online-softmax insight on dense attention
+                     (LM architectures; windowed for local attention)
+* seg_gat_agg_multigraph — the multi-lane execution (§4.2) in one kernel:
+                     work units from different semantic graphs dispatched
+                     via scalar-prefetched (graph_id, dst_row) tables
+"""
+from . import ops
+from .ops import flash_attention, fused_fp_coeff, seg_gat_agg
+from .seg_gat_agg_multigraph import seg_gat_agg_multigraph
+
+__all__ = ["ops", "flash_attention", "fused_fp_coeff", "seg_gat_agg", "seg_gat_agg_multigraph"]

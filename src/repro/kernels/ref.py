@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (deliberately naive/dense)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_seg_gat_agg(
+    col_index: jnp.ndarray,  # int32 [R, W]
+    masks: jnp.ndarray,      # bool [R, W, B, B]
+    theta_src: jnp.ndarray,  # [Ns_pad, H]
+    theta_dst: jnp.ndarray,  # [Nd_pad, H]
+    h_src: jnp.ndarray,      # [Ns_pad, H, Dh]
+    *,
+    leaky_slope: float = 0.2,
+    edge_bias: jnp.ndarray | float = 0.0,
+) -> jnp.ndarray:
+    """Densify the block-CSR adjacency and do textbook softmax attention."""
+    R, W = col_index.shape
+    B = masks.shape[-1]
+    nd, ns = R * B, theta_src.shape[0]
+    nblk = ns // B
+    # dense adjacency [Nd, Ns]
+    adj = jnp.zeros((nd, ns), bool)
+    for r in range(R):
+        for w in range(W):
+            c = int(col_index[r, w])
+            if c < 0:
+                continue
+            adj = adj.at[r * B : (r + 1) * B, c * B : (c + 1) * B].set(
+                jnp.logical_or(adj[r * B : (r + 1) * B, c * B : (c + 1) * B], masks[r, w])
+            )
+    logits = jax.nn.leaky_relu(
+        theta_dst[:, None, :] + theta_src[None, :, :] + edge_bias, leaky_slope
+    )  # [Nd, Ns, H]
+    logits = jnp.where(adj[:, :, None], logits, NEG_INF)
+    m = jnp.maximum(logits.max(axis=1, keepdims=True), NEG_INF)
+    p = jnp.where(adj[:, :, None], jnp.exp(logits - m), 0.0)
+    denom = p.sum(axis=1)  # [Nd, H]
+    num = jnp.einsum("dsh,shf->dhf", p, h_src)
+    del nblk
+    return num / jnp.maximum(denom, 1e-9)[:, :, None]
+
+
+def ref_fused_fp_coeff(
+    x: jnp.ndarray,      # [N, Din]
+    w: jnp.ndarray,      # [Din, H*Dh]
+    b: jnp.ndarray,      # [H*Dh]
+    a_src: jnp.ndarray,  # [H, Dh]
+    a_dst: jnp.ndarray,  # [H, Dh]
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    h = (x @ w + b).reshape(x.shape[0], a_src.shape[0], a_src.shape[1])
+    th_s = jnp.einsum("nhd,hd->nh", h, a_src)
+    th_d = jnp.einsum("nhd,hd->nh", h, a_dst)
+    return h.reshape(x.shape[0], -1), th_s, th_d
+
+
+def ref_flash_attention(
+    q: jnp.ndarray,  # [B, Hq, Sq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Sk, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Sk, Dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    b, hq, sq, dh = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    group = hq // hkv
+    scale = scale if scale is not None else dh ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    qpos = jnp.arange(sq)[:, None] + (sk - sq)  # align last q with last k
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v).astype(q.dtype)

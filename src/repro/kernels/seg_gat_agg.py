@@ -1,0 +1,167 @@
+"""Fused block-sparse online-softmax neighbor aggregation (Pallas TPU).
+
+This is the paper's fused NA datapath (§4.1.2, Fig. 6/7) adapted to the
+TPU: the irregular edge-centric stream of the accelerator becomes a
+block-densified sweep over the non-empty B×B (dst × src) adjacency blocks
+of a semantic graph.  Per dst-block row the kernel keeps the running
+numerator (acc), denominator (l) and max (m) resident in VMEM — the
+paper's softmax decomposition "aggregate the numerator immediately and
+accumulate it onto the denominator" (Fig. 6), made numerically stable with
+a running max — and only writes the finished aggregate once per row.
+
+Tiling (VMEM working set per grid step, B = 128, Dh <= 128, fp32):
+    mask block     B×B           64 KB
+    theta tiles    2×B           1 KB
+    h_src tile     B×Dh          64 KB
+    acc/m/l        B×Dh + 2B     65 KB
+  ≈ 200 KB « 16 MB VMEM; MXU sees B×B @ B×Dh matmuls (128-aligned).
+
+Grid: (H, R, W) = (heads, dst-block rows, max blocks per row); the W axis
+is sequential ("arbitrary") because scratch carries across it; H and R are
+embarrassingly parallel.  The block-column indices arrive via scalar
+prefetch so the src tiles for step w+1 can be fetched while step w
+computes (the accelerator's FP-Buf prefetch, done by the Pallas pipeline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    col_ref,      # int32 [R, W]
+    bias_ref,     # float32 [H]
+    # inputs
+    mask_ref,     # bool  [1, 1, B, B]
+    thd_ref,      # f32   [B, 1]
+    ths_ref,      # f32   [B, 1]
+    hs_ref,       # f32   [B, 1, Dh]
+    # output
+    out_ref,      # f32   [B, 1, Dh]
+    # scratch
+    acc_ref,      # f32   [B, Dh]
+    m_ref,        # f32   [B]
+    l_ref,        # f32   [B]
+    *,
+    leaky_slope: float,
+):
+    h = pl.program_id(0)
+    r = pl.program_id(1)
+    w = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when(w == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    col = col_ref[r, w]
+    live = jnp.logical_and(mask_ref[0, 0], col >= 0)  # [B, B]
+
+    thd = thd_ref[:, 0]  # [B] dst coefficients
+    ths = ths_ref[:, 0]  # [B] src coefficients
+    logits = thd[:, None] + ths[None, :] + bias_ref[h]
+    logits = jnp.where(logits >= 0, logits, leaky_slope * logits)  # LeakyReLU
+    logits = jnp.where(live, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    scale = jnp.exp(m_prev - m_new)  # [B]
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(live, p, 0.0)
+
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=1)
+    hs = hs_ref[:, 0, :].astype(jnp.float32)  # [B, Dh]
+    acc_ref[...] = acc_ref[...] * scale[:, None] + jnp.dot(
+        p, hs, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(w == nw - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-9)
+        out_ref[:, 0, :] = (acc_ref[...] / denom[:, None]).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("leaky_slope", "interpret", "block_override")
+)
+def seg_gat_agg(
+    col_index: jnp.ndarray,  # int32 [R, W]
+    masks: jnp.ndarray,      # bool  [R, W, B, B]
+    theta_src: jnp.ndarray,  # f32   [Ns_pad, H]
+    theta_dst: jnp.ndarray,  # f32   [Nd_pad, H]
+    h_src: jnp.ndarray,      # f32   [Ns_pad, H, Dh]
+    *,
+    leaky_slope: float = 0.2,
+    edge_bias: jnp.ndarray | float = 0.0,
+    interpret: bool = False,
+    block_override: int | None = None,
+) -> jnp.ndarray:
+    """Returns the attention-aggregated features [Nd_pad, H, Dh].
+
+    Contract (guaranteed by graphs.formats.to_block_csr): column indices
+    are unique within each row — duplicate columns would double-count
+    their masked edges in the online accumulation."""
+    R, W = col_index.shape
+    B = masks.shape[-1]
+    ns_pad, H = theta_src.shape
+    Dh = h_src.shape[-1]
+    assert theta_dst.shape == (R * B, H)
+    assert h_src.shape == (ns_pad, H, Dh)
+    del block_override
+
+    bias = jnp.broadcast_to(jnp.asarray(edge_bias, jnp.float32), (H,))
+
+    grid = (H, R, W)
+
+    def mask_map(h, r, w, col, bias_r):
+        return (r, w, 0, 0)
+
+    def thd_map(h, r, w, col, bias_r):
+        return (r, h)
+
+    def ths_map(h, r, w, col, bias_r):
+        return (jnp.maximum(col[r, w], 0), h)
+
+    def hs_map(h, r, w, col, bias_r):
+        return (jnp.maximum(col[r, w], 0), h, 0)
+
+    def out_map(h, r, w, col, bias_r):
+        return (r, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, B, B), mask_map),
+            pl.BlockSpec((B, 1), thd_map),
+            pl.BlockSpec((B, 1), ths_map),
+            pl.BlockSpec((B, 1, Dh), hs_map),
+        ],
+        out_specs=pl.BlockSpec((B, 1, Dh), out_map),
+        scratch_shapes=[
+            pltpu.VMEM((B, Dh), jnp.float32),
+            pltpu.VMEM((B,), jnp.float32),
+            pltpu.VMEM((B,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, leaky_slope=leaky_slope),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R * B, H, Dh), h_src.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="seg_gat_agg",
+    )(col_index, bias, masks, theta_dst, theta_src, h_src)
+    return out

@@ -1,0 +1,149 @@
+"""Multi-graph fused NA kernel — the paper's multi-lane execution (§4.2)
+at the Pallas level.
+
+One kernel launch processes work units from *different* semantic graphs:
+each unit is a (graph, dst-block-row) pair, exactly the work unit of
+core/multilane.py.  Scalar-prefetched ``graph_id``/``dst_row`` tables
+drive the BlockSpec index maps, so the per-unit theta tables (per-graph
+attention coefficients — the RAB-cached values) and the shared h_src
+stream in without any host-side regrouping: the hardware analogue of the
+Local Scheduler dispatching mixed-graph workloads onto one lane.
+
+Grid: (H, U, W) — U work units, W block slots per unit; scratch
+(m, l, acc) carries across W (online softmax, Fig. 6).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    # scalar prefetch
+    col_ref,    # int32 [U, W]
+    gid_ref,    # int32 [U]
+    row_ref,    # int32 [U]
+    bias_ref,   # f32   [G, H]
+    # inputs
+    mask_ref,   # bool [1, 1, B, B]
+    thd_ref,    # f32  [1, B, 1]   (graph-indexed dst coefficients)
+    ths_ref,    # f32  [1, B, 1]   (graph-indexed src coefficients)
+    hs_ref,     # f32  [B, 1, Dh]  (shared source features)
+    # output
+    out_ref,    # [B, 1, Dh]
+    # scratch
+    acc_ref, m_ref, l_ref,
+    *,
+    leaky_slope: float,
+):
+    h = pl.program_id(0)
+    u = pl.program_id(1)
+    w = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when(w == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    col = col_ref[u, w]
+    live = jnp.logical_and(mask_ref[0, 0], col >= 0)
+    thd = thd_ref[0, :, 0]
+    ths = ths_ref[0, :, 0]
+    logits = thd[:, None] + ths[None, :] + bias_ref[gid_ref[u], h]
+    logits = jnp.where(logits >= 0, logits, leaky_slope * logits)
+    logits = jnp.where(live, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1))
+    scale = jnp.exp(m_prev - m_new)
+    p = jnp.where(live, jnp.exp(logits - m_new[:, None]), 0.0)
+    l_ref[...] = l_ref[...] * scale + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * scale[:, None] + jnp.dot(
+        p, hs_ref[:, 0, :].astype(jnp.float32), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(w == nw - 1)
+    def _finalize():
+        out_ref[:, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-9)[:, None]
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("leaky_slope", "interpret"))
+def seg_gat_agg_multigraph(
+    col_index: jnp.ndarray,  # int32 [U, W]  src block columns (-1 pad, unique/row)
+    graph_id: jnp.ndarray,   # int32 [U]
+    dst_row: jnp.ndarray,    # int32 [U]     dst block row within the graph
+    masks: jnp.ndarray,      # bool  [U, W, B, B]
+    theta_src: jnp.ndarray,  # f32   [G, Ns_pad, H]
+    theta_dst: jnp.ndarray,  # f32   [G, Nd_pad, H]
+    h_src: jnp.ndarray,      # f32   [Ns_pad, H, Dh] (shared across graphs)
+    edge_bias: jnp.ndarray | None = None,  # [G, H]
+    *,
+    leaky_slope: float = 0.2,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Returns per-unit aggregates [U*B, H, Dh] (caller scatters by
+    (graph_id, dst_row) — disjoint by construction)."""
+    U, W = col_index.shape
+    B = masks.shape[-1]
+    G, ns_pad, H = theta_src.shape
+    Dh = h_src.shape[-1]
+    if edge_bias is None:
+        edge_bias = jnp.zeros((G, H), jnp.float32)
+
+    grid = (H, U, W)
+
+    def mask_map(h, u, w, col, gid, row, bias):
+        return (u, w, 0, 0)
+
+    def thd_map(h, u, w, col, gid, row, bias):
+        return (gid[u], row[u], h)
+
+    def ths_map(h, u, w, col, gid, row, bias):
+        return (gid[u], jnp.maximum(col[u, w], 0), h)
+
+    def hs_map(h, u, w, col, gid, row, bias):
+        return (jnp.maximum(col[u, w], 0), h, 0)
+
+    def out_map(h, u, w, col, gid, row, bias):
+        return (u, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, B, B), mask_map),
+            pl.BlockSpec((1, B, 1), thd_map),
+            pl.BlockSpec((1, B, 1), ths_map),
+            pl.BlockSpec((B, 1, Dh), hs_map),
+        ],
+        out_specs=pl.BlockSpec((B, 1, Dh), out_map),
+        scratch_shapes=[
+            pltpu.VMEM((B, Dh), jnp.float32),
+            pltpu.VMEM((B,), jnp.float32),
+            pltpu.VMEM((B,), jnp.float32),
+        ],
+    )
+    # theta tables are [G, N, H] with block (1, B, 1): graph-indexed rows
+    thd_blocked = theta_dst
+    ths_blocked = theta_src
+    return pl.pallas_call(
+        functools.partial(_kernel, leaky_slope=leaky_slope),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((U * B, H, Dh), h_src.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="seg_gat_agg_multigraph",
+    )(col_index, graph_id, dst_row, edge_bias, masks, thd_blocked, ths_blocked, h_src)

@@ -1,0 +1,96 @@
+"""Shared plumbing for the four HGNN models (HAN, R-GCN, R-GAT, S-HGN).
+
+Models are plain (params-pytree, pure-function) pairs: `init(rng, data_meta)
+-> params` and `forward(params, data, *, backend, fused) -> logits`.
+``fused=False`` runs each coarse stage as its *own* jitted program with
+blocking host barriers between them — the traditional staged execution of
+Fig. 4(a) that GPU frameworks exhibit.  ``fused=True`` compiles the whole
+layer into one XLA program — the bound-aware stage-fusion of Fig. 4(b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.fusion import NABackend, SemanticGraphBatch, batch_semantic_graph
+from ...graphs.hetgraph import HetGraph, SemanticGraph
+
+
+@dataclasses.dataclass
+class HGNNData:
+    """Device-resident inputs for one HGNN forward pass."""
+
+    features: dict[str, jnp.ndarray]          # type -> [N_t, D_t]
+    graphs: list[SemanticGraphBatch]
+    target_type: str
+    num_classes: int
+    labels: jnp.ndarray | None = None         # [N_target]
+
+    @property
+    def feature_dims(self) -> dict[str, int]:
+        return {t: int(x.shape[1]) for t, x in self.features.items()}
+
+
+def _data_flatten(d: HGNNData):
+    return (d.features, d.graphs, d.labels), (d.target_type, d.num_classes)
+
+
+def _data_unflatten(aux, children):
+    features, graphs, labels = children
+    return HGNNData(features=features, graphs=list(graphs), target_type=aux[0],
+                    num_classes=aux[1], labels=labels)
+
+
+jax.tree_util.register_pytree_node(HGNNData, _data_flatten, _data_unflatten)
+
+
+def prepare_data(
+    g: HetGraph,
+    sgs: Sequence[SemanticGraph],
+    target_type: str,
+    num_classes: int,
+    labels: np.ndarray | None = None,
+    *,
+    block: int = 128,
+    with_blocks: bool = True,
+) -> HGNNData:
+    return HGNNData(
+        features={t: jnp.asarray(x) for t, x in g.features.items()},
+        graphs=[batch_semantic_graph(s, block=block, with_blocks=with_blocks) for s in sgs],
+        target_type=target_type,
+        num_classes=num_classes,
+        labels=None if labels is None else jnp.asarray(labels),
+    )
+
+
+def glorot(rng: jax.Array, shape: tuple[int, ...]) -> jnp.ndarray:
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = float(np.sqrt(6.0 / (fan_in + fan_out)))
+    return jax.random.uniform(rng, shape, jnp.float32, -lim, lim)
+
+
+def split_keys(rng: jax.Array, n: int) -> list[jax.Array]:
+    return list(jax.random.split(rng, n))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+
+
+ForwardFn = Callable[..., jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class HGNNModel:
+    name: str
+    init: Callable[[jax.Array, HGNNData], dict]
+    forward: ForwardFn  # (params, data, *, backend) -> logits
+
+    def loss_fn(self, params, data: HGNNData, *, backend: NABackend = NABackend.SEGMENT):
+        logits = self.forward(params, data, backend=backend)
+        return cross_entropy(logits, data.labels)

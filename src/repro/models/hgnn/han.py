@@ -1,0 +1,125 @@
+"""HAN — Heterogeneous graph Attention Network (Wang et al., WWW'19).
+
+Table 2 semantics: type-specific FP, GAT neighbor attention per metapath
+semantic graph, semantic attention fusion (LSF+GSF split per Alg. 2).
+Metapath endpoints are all the target type, so FP projects the target
+features exactly once and every semantic graph gathers from it — the
+functional RAB (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ...core import stages
+from ...core.fusion import NABackend, neighbor_aggregate
+from .common import HGNNData, HGNNModel, glorot, split_keys
+
+
+def init_han(
+    rng: jax.Array,
+    data: HGNNData,
+    *,
+    hidden: int = 64,
+    heads: int = 8,
+    att_dim: int = 128,
+) -> dict:
+    d_in = data.feature_dims[data.target_type]
+    n_graphs = len(data.graphs)
+    keys = split_keys(rng, 5 + 2 * n_graphs)
+    params = {
+        "w_fp": glorot(keys[0], (d_in, heads * hidden)),
+        "b_fp": jnp.zeros((heads * hidden,)),
+        "a_src": jnp.stack([glorot(keys[5 + 2 * i], (heads, hidden)) for i in range(n_graphs)]),
+        "a_dst": jnp.stack([glorot(keys[6 + 2 * i], (heads, hidden)) for i in range(n_graphs)]),
+        "w_g": glorot(keys[1], (heads * hidden, att_dim)),
+        "b_g": jnp.zeros((att_dim,)),
+        "q": glorot(keys[2], (att_dim, 1))[:, 0],
+        "w_out": glorot(keys[3], (heads * hidden, data.num_classes)),
+        "b_out": jnp.zeros((data.num_classes,)),
+    }
+    return params
+
+
+def _han_embed(params, data: HGNNData, backend: NABackend):
+    """FP -> per-graph (theta, NA, LSF) -> GSF.  Pure (fusable)."""
+    x = data.features[data.target_type]
+    heads = params["a_src"].shape[1]
+    h = stages.feature_projection(x, params["w_fp"], params["b_fp"])
+    n = x.shape[0]
+    hh = h.reshape(n, heads, -1)
+
+    z_list, w_list = [], []
+    valid_dst = jnp.ones((n,), bool)
+    for i, batch in enumerate(data.graphs):
+        th_s, th_d = stages.attention_coefficients(hh, params["a_src"][i], params["a_dst"][i])
+        z = neighbor_aggregate(batch, th_s, th_d, hh, backend=backend)  # [N, H, Dh]
+        z = jax.nn.elu(z.reshape(n, -1))
+        w_p = stages.local_semantic_fusion(z, params["w_g"], params["b_g"], params["q"], valid_dst)
+        z_list.append(z)
+        w_list.append(w_p)
+    fused, beta = stages.global_semantic_fusion(jnp.stack(w_list), jnp.stack(z_list))
+    return fused, beta
+
+
+def han_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGMENT):
+    fused, _ = _han_embed(params, data, backend)
+    return fused @ params["w_out"] + params["b_out"]
+
+
+# --- staged execution (Fig. 4(a) baseline): one jitted program per stage ---
+
+@functools.partial(jax.jit, static_argnames=())
+def _fp_stage(w, b, x):
+    return stages.feature_projection(x, w, b)
+
+
+@jax.jit
+def _coeff_stage(h, a_src, a_dst):
+    return stages.attention_coefficients(h, a_src, a_dst)
+
+
+@functools.partial(jax.jit, static_argnames=("num_dst",))
+def _na_stage(src, dst, valid, th_s, th_d, h, num_dst):
+    z = stages.segment_softmax_aggregate(src, dst, valid, th_s, th_d, h, num_dst)
+    return jax.nn.elu(z.reshape(num_dst, -1))
+
+
+@jax.jit
+def _sf_stage(z_stack, w_g, b_g, q, w_out, b_out):
+    n = z_stack.shape[1]
+    valid = jnp.ones((n,), bool)
+    w_list = [
+        stages.local_semantic_fusion(z_stack[p], w_g, b_g, q, valid)
+        for p in range(z_stack.shape[0])
+    ]
+    fused, _ = stages.global_semantic_fusion(jnp.stack(w_list), z_stack)
+    return fused @ w_out + b_out
+
+
+def han_forward_staged(params, data: HGNNData):
+    """Traditional staged execution: each stage its own program with a host
+    barrier after it (`block_until_ready`), mirroring DGL-on-GPU."""
+    x = data.features[data.target_type]
+    heads = params["a_src"].shape[1]
+    h = _fp_stage(params["w_fp"], params["b_fp"], x)
+    h.block_until_ready()
+    hh = h.reshape(x.shape[0], heads, -1)
+    z_list = []
+    for i, batch in enumerate(data.graphs):
+        th_s, th_d = _coeff_stage(hh, params["a_src"][i], params["a_dst"][i])
+        th_s.block_until_ready()
+        z = _na_stage(batch.src, batch.dst, batch.valid, th_s, th_d, hh, batch.num_dst)
+        z.block_until_ready()
+        z_list.append(z)
+    out = _sf_stage(
+        jnp.stack(z_list), params["w_g"], params["b_g"], params["q"],
+        params["w_out"], params["b_out"],
+    )
+    out.block_until_ready()
+    return out
+
+
+HAN = HGNNModel(name="HAN", init=init_han, forward=han_forward)

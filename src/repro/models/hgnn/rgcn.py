@@ -1,0 +1,64 @@
+"""R-GCN — relational GCN (Schlichtkrull et al., ESWC'18).
+
+Table 2 semantics: relation-specific FP h^r = W^r x, mean NA per relation
+graph, SF h_v = sum_r z^r_v + W^{c_v} x_v (self loop), ReLU between layers.
+Relation-specific projection means FP work scales with #relations — the
+paper's observation that R-GCN benefits least from FP reuse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core.fusion import NABackend, mean_aggregate
+from .common import HGNNData, HGNNModel, glorot, split_keys
+
+
+def init_rgcn(
+    rng: jax.Array,
+    data: HGNNData,
+    *,
+    hidden: int = 64,
+    layers: int = 3,
+) -> dict:
+    dims = data.feature_dims
+    keys = iter(split_keys(rng, 2 + layers * (len(data.graphs) + len(dims)) + 2))
+    layer_params = []
+    for layer in range(layers):
+        rel_w, self_w = {}, {}
+        for i, g in enumerate(data.graphs):
+            d_src = dims[g.src_type] if layer == 0 else hidden
+            rel_w[f"g{i}"] = glorot(next(keys), (d_src, hidden))
+        for t, d in dims.items():
+            d_t = d if layer == 0 else hidden
+            self_w[t] = glorot(next(keys), (d_t, hidden))
+        layer_params.append({"rel": rel_w, "self": self_w})
+    return {
+        "layers": layer_params,
+        "w_out": glorot(next(keys), (hidden, data.num_classes)),
+        "b_out": jnp.zeros((data.num_classes,)),
+    }
+
+
+def rgcn_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGMENT):
+    del backend  # mean aggregation has a single implementation
+    h = dict(data.features)
+    for lp in params["layers"]:
+        # FP (relation-specific) + NA (mean) per relation graph
+        agg: dict[str, list[jnp.ndarray]] = {}
+        for i, batch in enumerate(data.graphs):
+            hr = h[batch.src_type] @ lp["rel"][f"g{i}"]
+            z = mean_aggregate(batch, hr)
+            agg.setdefault(batch.dst_type, []).append(z)
+        # SF: sum over relations + self transform
+        h_new = {}
+        for t in h:
+            s = h[t] @ lp["self"][t]
+            for z in agg.get(t, []):
+                s = s + z
+            h_new[t] = jax.nn.relu(s)
+        h = h_new
+    return h[data.target_type] @ params["w_out"] + params["b_out"]
+
+
+RGCN = HGNNModel(name="R-GCN", init=init_rgcn, forward=rgcn_forward)

@@ -1,0 +1,84 @@
+"""S-HGN / Simple-HGN (Lv et al., KDD'21).
+
+Table 2 semantics: type-specific FP, GAT-style NA whose logits carry a
+learnable *edge-type* term a_e^T (W_r r) — which is constant per relation
+and therefore enters our decomposed kernel as the scalar ``edge_bias``
+(exactly the coefficient reuse HiHGNN's RAB performs), residual
+connections, and no separate SF stage (relations fuse inside NA layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...core import stages
+from ...core.fusion import NABackend, neighbor_aggregate
+from .common import HGNNData, HGNNModel, glorot, split_keys
+
+
+def init_shgn(
+    rng: jax.Array,
+    data: HGNNData,
+    *,
+    hidden: int = 64,
+    heads: int = 4,
+    layers: int = 2,
+    edge_dim: int = 64,
+) -> dict:
+    dims = data.feature_dims
+    n_rel = len(data.graphs)
+    keys = iter(split_keys(rng, 4 + len(dims) + layers * (5 + n_rel)))
+    # type-specific input projection (the FP stage; done once — RAB reuse)
+    fp = {t: glorot(next(keys), (d, heads * hidden)) for t, d in dims.items()}
+    layer_params = []
+    for _ in range(layers):
+        layer_params.append(
+            {
+                "w": glorot(next(keys), (heads * hidden, heads * hidden)),
+                "a_src": glorot(next(keys), (heads, hidden)),
+                "a_dst": glorot(next(keys), (heads, hidden)),
+                "a_edge": glorot(next(keys), (heads, edge_dim)),
+                "r_emb": glorot(next(keys), (n_rel, edge_dim)),
+                "w_r": glorot(next(keys), (edge_dim, edge_dim)),
+            }
+        )
+    return {
+        "fp": fp,
+        "layers": layer_params,
+        "w_out": glorot(next(keys), (heads * hidden, data.num_classes)),
+        "b_out": jnp.zeros((data.num_classes,)),
+    }
+
+
+def shgn_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGMENT):
+    heads = params["layers"][0]["a_src"].shape[0]
+    # FP: each vertex type projected exactly once
+    h = {t: data.features[t] @ params["fp"][t] for t in data.features}
+    for lp in params["layers"]:
+        agg: dict[str, list[jnp.ndarray]] = {}
+        for i, batch in enumerate(data.graphs):
+            hs = (h[batch.src_type] @ lp["w"]).reshape(batch.num_src, heads, -1)
+            hd = (h[batch.dst_type] @ lp["w"]).reshape(batch.num_dst, heads, -1)
+            th_s, _ = stages.attention_coefficients(hs, lp["a_src"], lp["a_dst"])
+            _, th_d = stages.attention_coefficients(hd, lp["a_src"], lp["a_dst"])
+            # edge-type attention term: scalar per (relation, head)
+            r = lp["r_emb"][i] @ lp["w_r"]  # [edge_dim]
+            edge_bias = lp["a_edge"] @ r  # [heads]
+            z = neighbor_aggregate(
+                batch, th_s, th_d, hs, backend=backend, edge_bias=edge_bias
+            )
+            agg.setdefault(batch.dst_type, []).append(z.reshape(batch.num_dst, -1))
+        h_new = {}
+        for t in h:
+            if t in agg:
+                s = jnp.sum(jnp.stack(agg[t]), axis=0)
+                h_new[t] = jax.nn.elu(s) + h[t]  # residual
+            else:
+                h_new[t] = h[t]
+        h = h_new
+    out = h[data.target_type]
+    out = out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+    return out @ params["w_out"] + params["b_out"]
+
+
+SHGN = HGNNModel(name="S-HGN", init=init_shgn, forward=shgn_forward)

@@ -1,0 +1,66 @@
+"""Unified model API: one object per architecture family that launch/,
+train/ and serve/ drive without knowing the family internals."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, transformer
+from .config import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class LMApi:
+    cfg: LMConfig
+    init: Callable[[jax.Array], Any]
+    axes: Callable[[], Any]
+    # forward(params, tokens, **kw) -> (logits, aux)
+    forward: Callable[..., tuple[jnp.ndarray, jnp.ndarray]]
+    # decode(params, tokens, cache_pos, caches, **kw) -> (logits, caches)
+    decode: Callable[..., tuple[jnp.ndarray, Any]]
+    init_caches: Callable[..., Any]
+
+    @property
+    def name(self) -> str:
+        return self.cfg.name
+
+
+def build(cfg: LMConfig) -> LMApi:
+    if cfg.is_encoder_decoder:
+        def fwd(params, tokens, **kw):
+            return encdec.forward(params, cfg, tokens, **kw)
+
+        def dec(params, tokens, cache_pos, caches, **kw):
+            cross = kw.pop("cross_kv")
+            return encdec.decode_step(params, cfg, tokens, cache_pos, caches, cross)
+
+        return LMApi(
+            cfg=cfg,
+            init=lambda rng: encdec.init_encdec(cfg, rng),
+            axes=lambda: encdec.encdec_axes(cfg),
+            forward=fwd,
+            decode=dec,
+            init_caches=lambda batch, cache_len, dtype=jnp.bfloat16: encdec.init_encdec_caches(
+                cfg, batch, cache_len, dtype
+            ),
+        )
+
+    def fwd(params, tokens, **kw):
+        return transformer.forward(params, cfg, tokens, **kw)
+
+    def dec(params, tokens, cache_pos, caches, **kw):
+        return transformer.decode_step(params, cfg, tokens, cache_pos, caches)
+
+    return LMApi(
+        cfg=cfg,
+        init=lambda rng: transformer.init_decoder(cfg, rng),
+        axes=lambda: transformer.decoder_axes(cfg),
+        forward=fwd,
+        decode=dec,
+        init_caches=lambda batch, cache_len, dtype=jnp.bfloat16: transformer.init_caches(
+            cfg, batch, cache_len, dtype
+        ),
+    )

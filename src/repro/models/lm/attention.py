@@ -1,0 +1,300 @@
+"""GQA attention: RoPE/M-RoPE, qk-norm, bias, windowing, KV cache.
+
+Two implementations with identical semantics:
+  * "xla"   — einsum attention (used for dry-run/roofline compiles; XLA's
+              TPU fusions handle it and cost analysis stays transparent)
+  * "flash" — the Pallas online-softmax kernel (kernels/flash_attention),
+              the TPU-target artifact; interpret=True on CPU tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ...dist.sharding import shard
+from .config import LMConfig
+from .layers import P, apply_rope, rms_norm
+
+NEG_INF = -1e30
+
+
+def attention_specs(cfg: LMConfig, *, layers: int | None = None, cross: bool = False) -> dict:
+    d = cfg.d_model
+    hq = cfg.num_heads * cfg.head_dim
+    hkv = cfg.num_kv_heads * cfg.head_dim
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    specs = {
+        "wq": P(lead + (d, hq), lax_ + ("embed", "heads")),
+        "wk": P(lead + (d, hkv), lax_ + ("embed", "kv_heads")),
+        "wv": P(lead + (d, hkv), lax_ + ("embed", "kv_heads")),
+        "wo": P(lead + (hq, d), lax_ + ("heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        specs.update(
+            bq=P(lead + (hq,), lax_ + ("heads",), init="zeros"),
+            bk=P(lead + (hkv,), lax_ + ("kv_heads",), init="zeros"),
+            bv=P(lead + (hkv,), lax_ + ("kv_heads",), init="zeros"),
+        )
+    if cfg.qk_norm and not cross:
+        specs.update(
+            q_norm=P(lead + (cfg.head_dim,), lax_ + (None,), init="ones"),
+            k_norm=P(lead + (cfg.head_dim,), lax_ + (None,), init="ones"),
+        )
+    return specs
+
+
+@dataclasses.dataclass
+class AttnCache:
+    """KV cache: full-context or ring-buffered (local attention)."""
+
+    k: jnp.ndarray    # [B, S_cache, Hkv, Dh]
+    v: jnp.ndarray    # [B, S_cache, Hkv, Dh]
+    pos: jnp.ndarray  # [B, S_cache] absolute position of each slot (-1 empty)
+
+
+jax.tree_util.register_pytree_node(
+    AttnCache,
+    lambda c: ((c.k, c.v, c.pos), None),
+    lambda _, ch: AttnCache(*ch),
+)
+
+
+def init_attn_cache(cfg: LMConfig, batch: int, cache_len: int, dtype) -> AttnCache:
+    eff = min(cache_len, cfg.window) if cfg.window else cache_len
+    return AttnCache(
+        k=jnp.zeros((batch, eff, cfg.num_kv_heads, cfg.head_dim), dtype),
+        v=jnp.zeros((batch, eff, cfg.num_kv_heads, cfg.head_dim), dtype),
+        pos=jnp.full((batch, eff), -1, jnp.int32),
+    )
+
+
+def _project_qkv(params, x, cfg: LMConfig, *, qseq: bool = False):
+    b, s, _ = x.shape
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if qseq:
+        # full-sequence path: project directly into the context-parallel
+        # layout the attention uses — resharding q/k/v from heads-sharded
+        # to qseq-sharded costs an all-gather + copy per layer (§Perf HC1).
+        # k/v replicate over `model` (GQA keys are small; the wk/wv weight
+        # gather is cheaper than resharding activations).
+        q = shard(q, "act_batch", "act_qseq", None)
+        k = shard(k, "act_batch", None, None)
+        v = shard(v, "act_batch", None, None)
+    else:
+        q = shard(q, "act_batch", "act_seq", "act_heads")
+        k = shard(k, "act_batch", "act_seq", "act_heads")
+        v = shard(v, "act_batch", "act_seq", "act_heads")
+    q = q.reshape(b, s, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _sdpa_xla(q, k, v, mask, cfg: LMConfig, *, shard_qseq: bool = False):
+    """q [B,Sq,Hq,Dh], k/v [B,Sk,Hkv,Dh], mask [B,Sq,Sk] bool.
+
+    ``shard_qseq`` enables context-parallel attention: scores shard over
+    the q-sequence dim on `model` (head counts rarely divide a 16-way TP
+    axis; q-seq always does for the assigned shapes).  k/v replicate over
+    `model` — a small all-gather instead of an S×S score all-reduce."""
+    b, sq, hq, dh = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    if shard_qseq:
+        q = shard(q, "act_batch", "act_qseq", None, None)
+        k = shard(k, "act_batch", None, None, None)
+        v = shard(v, "act_batch", None, None, None)
+    qg = q.reshape(b, sq, hkv, group, dh)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * (dh ** -0.5)
+    if cfg.logits_soft_cap:
+        logits = cfg.logits_soft_cap * jnp.tanh(logits / cfg.logits_soft_cap)
+    if shard_qseq:
+        logits = shard(logits, "act_batch", None, None, "act_qseq", None)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    if shard_qseq:
+        out = shard(out, "act_batch", "act_qseq", None, None, None)
+    return out.reshape(b, sq, hq, dh)
+
+
+def _sdpa_flash_xla(
+    q, k, v, cfg: LMConfig, *, causal: bool, window: int | None,
+    q_chunk: int = 1024, k_chunk: int = 2048,
+):
+    """Chunked online-softmax attention in pure XLA — the compile/roofline
+    stand-in for the Pallas flash kernel: no S×S score tensor ever exists.
+    q chunks are vectorized (and context-parallel over `model`); k chunks
+    stream through a scan carrying (m, l, acc) — the paper's softmax
+    decomposition (Fig. 6) at the XLA level."""
+    b, s, hq, dh = q.shape
+    hkv, sk = k.shape[2], k.shape[1]
+    group = hq // hkv
+    qc = min(q_chunk, s)
+    kc = min(k_chunk, sk)
+    nq, nk = s // qc, sk // kc
+    scale = dh ** -0.5
+    qr = q.reshape(b, nq, qc, hkv, group, dh)
+    qr = shard(qr, "act_batch", "act_qseq", None, None, None, None)
+    kr = k.reshape(b, nk, kc, hkv, dh)
+    vr = v.reshape(b, nk, kc, hkv, dh)
+    qpos = (jnp.arange(nq)[:, None] * qc + jnp.arange(qc)[None, :]) + (sk - s)
+
+    def _cshard(c):
+        m_, l_, a_ = c
+        return (
+            shard(m_, "act_batch", "act_qseq", None, None, None),
+            shard(l_, "act_batch", "act_qseq", None, None, None),
+            shard(a_, "act_batch", "act_qseq", None, None, None, None),
+        )
+
+    def kstep(carry, inp):
+        m_run, l_run, acc = _cshard(carry)  # [b,nq,hkv,g,qc], same, [...,dh]
+        kb, vb, koff = inp                  # [b,kc,hkv,dh], [b,kc,hkv,dh], scalar
+        sblk = jnp.einsum("bnqhgd,bkhd->bnhgqk", qr, kb).astype(jnp.float32) * scale
+        sblk = shard(sblk, "act_batch", "act_qseq", None, None, None, None)
+        if cfg.logits_soft_cap:
+            sblk = cfg.logits_soft_cap * jnp.tanh(sblk / cfg.logits_soft_cap)
+        kpos = koff + jnp.arange(kc)
+        mask = jnp.ones((nq, qc, kc), bool)
+        if causal:
+            mask &= kpos[None, None, :] <= qpos[:, :, None]
+        if window is not None:
+            mask &= kpos[None, None, :] > qpos[:, :, None] - window
+        mask6 = mask[None, :, None, None, :, :]  # [1,nq,1,1,qc,kc]
+        sblk = jnp.where(mask6, sblk, NEG_INF)
+        m_new = jnp.maximum(m_run, sblk.max(axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(sblk - m_new[..., None])
+        p = jnp.where(mask6, p, 0.0)
+        l_new = l_run * alpha + p.sum(-1)
+        upd = jnp.einsum("bnhgqk,bkhd->bnhgqd", p.astype(q.dtype), vb).astype(jnp.float32)
+        acc_new = acc * alpha[..., None] + upd
+        return _cshard((m_new, l_new, acc_new)), None
+
+    init = _cshard((
+        jnp.full((b, nq, hkv, group, qc), NEG_INF, jnp.float32),
+        jnp.zeros((b, nq, hkv, group, qc), jnp.float32),
+        jnp.zeros((b, nq, hkv, group, qc, dh), jnp.float32),
+    ))
+    xs = (
+        kr.transpose(1, 0, 2, 3, 4),
+        vr.transpose(1, 0, 2, 3, 4),
+        jnp.arange(nk) * kc,
+    )
+    (m_f, l_f, acc), _ = jax.lax.scan(kstep, init, xs)
+    out = acc / jnp.maximum(l_f, 1e-9)[..., None]
+    out = out.astype(q.dtype).transpose(0, 1, 4, 2, 3, 5)  # b,nq,qc,hkv,g,dh
+    return out.reshape(b, s, hq, dh)
+
+
+def attention_forward(
+    params: dict,
+    x: jnp.ndarray,           # [B, S, D]
+    cfg: LMConfig,
+    *,
+    angles: jnp.ndarray | None,   # [B, S, Dh//2] rope angles (None: no rope)
+    window: int | None = None,
+    causal: bool = True,
+    impl: str = "xla",
+) -> jnp.ndarray:
+    """Full-sequence (train / prefill) self-attention."""
+    b, s, _ = x.shape
+    # NOTE §Perf HC1-iter1 (refuted): qseq=True here *increases* collective
+    # volume — projecting into the context-parallel layout conflicts with
+    # the model-axis weight sharding and XLA gathers activations instead.
+    q, k, v = _project_qkv(params, x, cfg, qseq=False)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    if impl == "flash" or impl == "flash_interpret":
+        from ...kernels import flash_attention
+
+        out = flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3),
+            causal=causal, window=window,
+            interpret=impl == "flash_interpret",
+            block_q=min(512, s), block_k=min(512, s),
+        ).transpose(0, 2, 1, 3)
+    elif s >= 8192:  # long-context: never materialize S×S scores
+        out = _sdpa_flash_xla(q, k, v, cfg, causal=causal, window=window)
+    else:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        mask = jnp.ones((s, s), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        out = _sdpa_xla(q, k, v, jnp.broadcast_to(mask, (b, s, s)), cfg, shard_qseq=True)
+    out = out.reshape(b, s, cfg.num_heads * cfg.head_dim)
+    out = shard(out, "act_batch", "act_seq", "act_heads")
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(
+    params: dict,
+    x: jnp.ndarray,            # [B, 1, D]
+    cfg: LMConfig,
+    cache: AttnCache,
+    cache_pos: jnp.ndarray,    # scalar int32: absolute position of this token
+    *,
+    angles: jnp.ndarray | None,  # [B, 1, Dh//2]
+    window: int | None = None,
+) -> tuple[jnp.ndarray, AttnCache]:
+    """Single-token decode against a (possibly ring-buffered) KV cache."""
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        k_new = apply_rope(k_new, angles)
+    slot_len = cache.k.shape[1]
+    if window is not None:
+        slot = cache_pos % slot_len  # ring buffer
+    else:
+        slot = jnp.minimum(cache_pos, slot_len - 1)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(
+        cache.pos, jnp.broadcast_to(cache_pos, (b, 1)).astype(jnp.int32), (0, slot)
+    )
+    valid = (pos >= 0) & (pos <= cache_pos)
+    if window is not None:
+        valid &= pos > cache_pos - window
+    out = _sdpa_xla(q, k, v, valid[:, None, :], cfg)  # [B,1,Hq,Dh]
+    out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
+    return out @ params["wo"].astype(x.dtype), AttnCache(k=k, v=v, pos=pos)
+
+
+def cross_attention_forward(
+    params: dict,
+    x: jnp.ndarray,        # [B, Sq, D]
+    kv: tuple[jnp.ndarray, jnp.ndarray],  # precomputed enc K/V [B, Sk, Hkv, Dh]
+    cfg: LMConfig,
+) -> jnp.ndarray:
+    b, sq, _ = x.shape
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, sq, cfg.num_heads, cfg.head_dim)
+    k, v = kv
+    mask = jnp.ones((b, sq, k.shape[1]), bool)
+    out = _sdpa_xla(q, k, v, mask, cfg, shard_qseq=True).reshape(b, sq, -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def encode_cross_kv(params: dict, enc_out: jnp.ndarray, cfg: LMConfig):
+    b, sk, _ = enc_out.shape
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)).reshape(b, sk, cfg.num_kv_heads, cfg.head_dim)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)).reshape(b, sk, cfg.num_kv_heads, cfg.head_dim)
+    return k, v

@@ -1,0 +1,128 @@
+"""Shared LM building blocks: param-spec machinery, norms, RoPE/M-RoPE."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Spec-driven parameters: one source of truth for shape + logical axes.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Parameter spec: shape, logical sharding axes, initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # stddev; default fan-in
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, P)
+
+
+def init_from_specs(specs, rng: jax.Array, param_dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(rng, len(leaves))
+
+    def mk(spec: P, key):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, param_dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, param_dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale if spec.scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(param_dtype)
+
+    return jax.tree_util.tree_unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def axes_from_specs(specs):
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def abstract_from_specs(specs, param_dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, param_dtype), specs, is_leaf=is_spec
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> jnp.ndarray:
+    """positions [..., S] -> angles [..., S, head_dim//2] (fp32)."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def mrope_angles(
+    positions: jnp.ndarray,  # [..., S, 3] (t, h, w)
+    head_dim: int,
+    theta: float,
+    sections: tuple[int, ...],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: frequency slots are partitioned into
+    (temporal, height, width) sections, each driven by its own position
+    component.  Text tokens carry t == h == w, reducing to plain RoPE."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    sec_id = jnp.asarray(
+        np.repeat(np.arange(len(sections)), np.asarray(sections)), jnp.int32
+    )  # [half] -> which component
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(sec_id, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # [..., S, half]
+    return pos * inv_freq
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x [B, S, H, Dh]; angles [B, S, Dh//2] -> rotated x (llama-style
+    rotate-half layout)."""
+    half = x.shape[-1] // 2
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style fixed positional embeddings [n, d]."""
+    pos = np.arange(n)[:, None]
+    idx = np.arange(d // 2)[None, :]
+    angle = pos / (10000 ** (idx / max(d // 2 - 1, 1)))
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=1)
+    return out.astype(np.float32)

@@ -1,0 +1,49 @@
+"""Dense MLP blocks (SwiGLU / GELU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...dist.sharding import shard
+from .config import LMConfig
+from .layers import P
+
+
+def mlp_specs(cfg: LMConfig, *, layers: int | None = None) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    lead = () if layers is None else (layers,)
+    lax = () if layers is None else ("layers",)
+    if cfg.mlp_gated:
+        return {
+            "w_gate": P(lead + (d, ff), lax + ("embed", "mlp")),
+            "w_up": P(lead + (d, ff), lax + ("embed", "mlp")),
+            "w_down": P(lead + (ff, d), lax + ("mlp", "embed")),
+        }
+    return {
+        "w_up": P(lead + (d, ff), lax + ("embed", "mlp")),
+        "b_up": P(lead + (ff,), lax + ("mlp",), init="zeros"),
+        "w_down": P(lead + (ff, d), lax + ("mlp", "embed")),
+        "b_down": P(lead + (d,), lax + (None,), init="zeros"),
+    }
+
+
+def _act(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),  # nemotron/minitron
+    }[name]
+
+
+def mlp_forward(params: dict, x: jnp.ndarray, cfg: LMConfig) -> jnp.ndarray:
+    """x [B, S, D] -> [B, S, D]."""
+    act = _act(cfg.act)
+    dt = x.dtype
+    if cfg.mlp_gated:
+        h = act(x @ params["w_gate"].astype(dt)) * (x @ params["w_up"].astype(dt))
+        h = shard(h, "act_batch", None, "act_mlp")
+        return h @ params["w_down"].astype(dt)
+    h = act(x @ params["w_up"].astype(dt) + params["b_up"].astype(dt))
+    h = shard(h, "act_batch", None, "act_mlp")
+    return h @ params["w_down"].astype(dt) + params["b_down"].astype(dt)

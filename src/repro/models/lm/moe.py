@@ -1,0 +1,113 @@
+"""Mixture-of-Experts with capacity-based sorted dispatch.
+
+This is where HiHGNN's ideas transfer directly to the assigned MoE archs
+(DESIGN.md §5): experts are the semantic graphs — independent parallel
+computation fused by a router-weighted combine (GSF analogue).  The
+independency-aware multi-lane execution becomes expert parallelism (the
+expert dim sharded on the `model` mesh axis), and the paper's overflow
+workload (OW) handling becomes the capacity factor: tokens beyond an
+expert's capacity are dropped to the residual path, keeping every lane's
+workload bounded exactly like the Local Scheduler's threshold.
+
+Dispatch is sort-based per batch row (static shapes, no [B,S,E,C] one-hot
+blowup): tokens are ranked within their expert by arrival order and
+written into an [E, C] index table; gather -> expert FFN einsum ->
+weighted scatter-add back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...dist.sharding import shard
+from .config import LMConfig
+from .layers import P
+
+
+def moe_specs(cfg: LMConfig, *, layers: int | None = None) -> dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    # EP when experts divide the model axis (dbrx 16e); otherwise experts
+    # replicate and the FFN dim is tensor-parallel (grok 8e) — DESIGN.md §5
+    ex = "experts" if cfg.ep_shard else None
+    return {
+        "router": P(lead + (d, e), lax_ + ("embed", None)),
+        "w_gate": P(lead + (e, d, ff), lax_ + (ex, "embed", "mlp")),
+        "w_up": P(lead + (e, d, ff), lax_ + (ex, "embed", "mlp")),
+        "w_down": P(lead + (e, ff, d), lax_ + (ex, "mlp", "embed")),
+    }
+
+
+def _capacity(cfg: LMConfig, seq: int) -> int:
+    c = int(seq * cfg.experts_per_tok * cfg.moe_capacity_factor / cfg.num_experts)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_forward(
+    params: dict, x: jnp.ndarray, cfg: LMConfig
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Per-row dispatch: each batch row routes its S tokens independently
+    (rows are data-parallel, experts model-parallel)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_tok
+    cap = _capacity(cfg, s)
+
+    logits = (x @ params["router"]).astype(jnp.float32)  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))  # [E]
+    ce = jax.nn.one_hot(expert_ids, e).sum(axis=2).mean(axis=(0, 1)) / k  # [E]
+    aux = e * jnp.sum(me * ce)
+
+    def dispatch_row(ids_row, gates_row, x_row):
+        # ids_row [S, k]; x_row [S, D] -> per-expert token tables
+        flat_e = ids_row.reshape(-1)  # [S*k]
+        flat_tok = jnp.repeat(jnp.arange(s), k)
+        flat_gate = gates_row.reshape(-1)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_tok[order], flat_gate[order]
+        # rank of each copy within its expert
+        start = jnp.searchsorted(se, jnp.arange(e))  # [E]
+        rank = jnp.arange(s * k) - start[se]
+        keep = rank < cap
+        # index table [E, cap] of token ids (-1 = empty), gate table [E, cap]
+        tbl = jnp.full((e, cap), -1, jnp.int32)
+        gtbl = jnp.zeros((e, cap), jnp.float32)
+        slot_e = jnp.where(keep, se, 0)
+        slot_r = jnp.where(keep, rank, 0)
+        tok_val = jnp.where(keep, st, -1).astype(jnp.int32)
+        gate_val = jnp.where(keep, sg, 0.0)
+        # later writes win; padding writes all target (0,0) with -1 only if
+        # keep is False there -> guard with max-combine via .add on one-hot-free path
+        tbl = tbl.at[slot_e, slot_r].max(tok_val)
+        gtbl = gtbl.at[slot_e, slot_r].add(jnp.where(keep, gate_val, 0.0))
+        xin = jnp.where((tbl >= 0)[:, :, None], x_row[jnp.maximum(tbl, 0)], 0.0)  # [E, cap, D]
+        return xin, tbl, gtbl
+
+    xin, tbl, gtbl = jax.vmap(dispatch_row)(expert_ids, gate_vals, x)  # [B, E, cap, D]
+    ex_act = "act_experts" if cfg.ep_shard else None
+    xin = shard(xin, "act_batch", ex_act, None, "act_embed")
+
+    dt = x.dtype
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin, params["w_gate"].astype(dt)))
+    h = h * jnp.einsum("becd,edf->becf", xin, params["w_up"].astype(dt))
+    h = shard(h, "act_batch", ex_act, None, "act_mlp")
+    y = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(dt))  # [B, E, cap, D]
+    y = shard(y, "act_batch", ex_act, None, "act_embed")
+
+    def combine_row(y_row, tbl_row, gtbl_row):
+        out = jnp.zeros((s, d), y_row.dtype)
+        w = jnp.where(tbl_row >= 0, gtbl_row, 0.0).astype(y_row.dtype)
+        return out.at[jnp.maximum(tbl_row, 0).reshape(-1)].add(
+            (y_row * w[:, :, None]).reshape(-1, d)
+        )
+
+    out = jax.vmap(combine_row)(y, tbl, gtbl)
+    out = shard(out, "act_batch", None, "act_embed")
+    return out.astype(x.dtype), aux.astype(jnp.float32)

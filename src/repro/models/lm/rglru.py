@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, De et al. 2024).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(W_a x_t + b_a)              (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)              (input gate)
+    log a_t = -c * softplus(Lambda) * r_t     (diagonal decay, a_t in (0,1))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+
+The linear recurrence is computed with `jax.lax.associative_scan` for
+training/prefill (log-depth parallel — the TPU-native answer to a
+sequential RNN) and as an O(1) step for decode, which is what makes
+``long_500k`` runnable for this hybrid architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import LMConfig
+from .layers import P
+
+
+def rglru_specs(cfg: LMConfig, *, layers: int | None = None) -> dict:
+    d = cfg.d_model
+    rw = cfg.rnn_width or d
+    lead = () if layers is None else (layers,)
+    lx = () if layers is None else ("layers",)
+    return {
+        "w_x": P(lead + (d, rw), lx + ("embed", "rnn")),       # recurrent branch in
+        "w_y": P(lead + (d, rw), lx + ("embed", "rnn")),       # gate branch in
+        "conv_w": P(lead + (cfg.ssm_conv_width, rw), lx + (None, "rnn"), scale=0.3),
+        "conv_b": P(lead + (rw,), lx + ("rnn",), init="zeros"),
+        "w_a": P(lead + (rw, rw), lx + ("rnn", None), scale=0.01),
+        "b_a": P(lead + (rw,), lx + ("rnn",), init="zeros"),
+        "w_i": P(lead + (rw, rw), lx + ("rnn", None), scale=0.01),
+        "b_i": P(lead + (rw,), lx + ("rnn",), init="zeros"),
+        "lam": P(lead + (rw,), lx + ("rnn",), init="ones"),    # Lambda
+        "w_out": P(lead + (rw, d), lx + ("rnn", "embed")),
+    }
+
+
+def _gates(params, u, cfg: LMConfig):
+    """u [.., rw] (post-conv) -> (log_a, gated input) in fp32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_a"].astype(jnp.float32) + params["b_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ params["w_i"].astype(jnp.float32) + params["b_i"].astype(jnp.float32))
+    log_a = -cfg.rglru_c * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * uf)
+    return a, b
+
+
+def _conv(params, u, state):
+    w = params["conv_w"].shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], w - 1, u.shape[-1]), u.dtype)
+    padded = jnp.concatenate([state, u], axis=1)
+    out = sum(
+        padded[:, i : i + u.shape[1], :] * params["conv_w"][i].astype(u.dtype)
+        for i in range(w)
+    )
+    return out + params["conv_b"].astype(u.dtype), padded[:, -(w - 1) :, :]
+
+
+def rglru_forward(params, x: jnp.ndarray, cfg: LMConfig, conv_state=None, h_state=None):
+    """x [B,S,D] -> (y [B,S,D], (conv_state, h_state))."""
+    u = x @ params["w_x"].astype(x.dtype)
+    u, conv_state = _conv(params, u, conv_state)
+    a, bterm = _gates(params, u, cfg)  # [B,S,rw] fp32
+    if h_state is not None:
+        # fold the carried state into the first step's additive term
+        bterm = bterm.at[:, 0, :].add(a[:, 0, :] * h_state.astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, bterm), axis=1)
+    h_state = h[:, -1, :]
+    gate = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    y = (h.astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return y, (conv_state, h_state)
+
+
+def rglru_decode(params, x: jnp.ndarray, cfg: LMConfig, conv_state, h_state):
+    """x [B,1,D] single step."""
+    u = x @ params["w_x"].astype(x.dtype)
+    u, conv_state = _conv(params, u, conv_state)
+    a, bterm = _gates(params, u, cfg)
+    h = a[:, 0] * h_state.astype(jnp.float32) + bterm[:, 0]
+    gate = jax.nn.gelu(x @ params["w_y"].astype(x.dtype))
+    y = (h[:, None, :].astype(x.dtype) * gate) @ params["w_out"].astype(x.dtype)
+    return y, (conv_state, h)
+
+
+def init_rglru_cache(cfg: LMConfig, batch: int, dtype):
+    rw = cfg.rnn_width or cfg.d_model
+    conv = jnp.zeros((batch, cfg.ssm_conv_width - 1, rw), dtype)
+    h = jnp.zeros((batch, rw), jnp.float32)
+    return conv, h

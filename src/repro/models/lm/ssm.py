@@ -1,0 +1,168 @@
+"""Mamba2 — State Space Duality (SSD) block (Dao & Gu, 2024).
+
+Chunked SSD: within a chunk the recurrence is computed as masked
+attention-like matmuls (MXU-friendly); across chunks a small state
+[H, P, N] is carried by a scan.  The same structure HiHGNN exploits —
+compute-bound intra-block work fused with a cheap sequential carry — and
+the reason this arch supports ``long_500k``: decode state is O(1) in
+context length.
+
+Shapes: d_inner = expand*d_model, P = head_dim, H = d_inner/P, N = state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ...dist.sharding import shard
+from .config import LMConfig
+from .layers import P, rms_norm
+
+
+def ssm_specs(cfg: LMConfig, *, layers: int | None = None) -> dict:
+    d = cfg.d_model
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    lead = () if layers is None else (layers,)
+    lx = () if layers is None else ("layers",)
+    return {
+        # in_proj emits (z, x, B, C, dt)
+        "w_in": P(lead + (d, 2 * di + 2 * n + h), lx + ("embed", "ssm_inner")),
+        "conv_w": P(lead + (cfg.ssm_conv_width, conv_ch), lx + (None, "ssm_inner"), scale=0.3),
+        "conv_b": P(lead + (conv_ch,), lx + ("ssm_inner",), init="zeros"),
+        "a_log": P(lead + (h,), lx + (None,), init="zeros"),
+        "dt_bias": P(lead + (h,), lx + (None,), init="zeros"),
+        "d_skip": P(lead + (h,), lx + (None,), init="ones"),
+        "norm": P(lead + (di,), lx + ("ssm_inner",), init="ones"),
+        "w_out": P(lead + (di, d), lx + ("ssm_inner", "embed")),
+    }
+
+
+def _split_in(params, x, cfg: LMConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ params["w_in"].astype(x.dtype)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt  # dt [..., H]
+
+
+def _causal_conv(xbc, conv_w, conv_b, state=None):
+    """Depthwise causal conv1d.  xbc [B, S, C]; conv_w [W, C].
+
+    state [B, W-1, C] holds the trailing inputs from the previous segment
+    (None = zero history).  Returns (out [B,S,C], new_state)."""
+    w = conv_w.shape[0]
+    b = xbc.shape[0]
+    if state is None:
+        state = jnp.zeros((b, w - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([state, xbc], axis=1)
+    out = sum(
+        padded[:, i : i + xbc.shape[1], :] * conv_w[i].astype(xbc.dtype)
+        for i in range(w)
+    )
+    new_state = padded[:, -(w - 1) :, :]
+    return jax.nn.silu(out + conv_b.astype(xbc.dtype)), new_state
+
+
+def _ssd_chunked(xh, dt, a, bmat, cmat, chunk: int, init_state=None):
+    """SSD scan.  xh [B,S,H,P]; dt [B,S,H] (post-softplus); a [H] (<0);
+    bmat/cmat [B,S,N].  Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+
+    lam = dt * a  # [B,S,H] log-decay per step (negative)
+    xdt = xh * dt[..., None]  # dt-weighted inputs
+
+    def resh(t):
+        return t.reshape((b, nc, chunk) + t.shape[2:])
+
+    lam_c, xdt_c, b_c, c_c = resh(lam), resh(xdt), resh(bmat), resh(cmat)
+    cum = jnp.cumsum(lam_c, axis=2)  # [B,nc,L,H] inclusive log-decay
+
+    # intra-chunk (dual/attention form): G[t,s'] = C_t·B_s' * exp(cum_t - cum_s'), s'<=t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,L,L,H]
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bctn,bcsn->bcts", c_c, b_c)  # [B,nc,L,L]
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", cb, decay, xdt_c)
+
+    # per-chunk outgoing state: sum_s exp(cum_last - cum_s) * B_s ⊗ xdt_s
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,L,H]
+    states = jnp.einsum("bcsh,bcsn,bcshp->bchpn", decay_out, b_c, xdt_c)
+
+    # inter-chunk scan over the carried state
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), xh.dtype)
+
+    def step(carry, inp):
+        dec, st_new = inp  # [B,H], [B,H,P,N]
+        out_carry = carry * dec[:, :, None, None] + st_new
+        return out_carry, carry  # emit the state *entering* this chunk
+
+    final_state, entry_states = jax.lax.scan(
+        step,
+        init_state,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)),
+    )
+    entry_states = entry_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # inter-chunk contribution: C_t · (entry_state decayed to t)
+    decay_in = jnp.exp(cum)  # [B,nc,L,H]
+    y_inter = jnp.einsum("bctn,bchpn,bcth->bcthp", c_c, entry_states, decay_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y, final_state
+
+
+def ssm_forward(params, x: jnp.ndarray, cfg: LMConfig, conv_state=None, ssd_state=None):
+    """Full-sequence mamba2 block.  x [B,S,D] -> (y, (conv_state, ssd_state))."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    z, xbc, dt = _split_in(params, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    xh = xi.reshape(x.shape[0], x.shape[1], h, p)
+    xh = shard(xh, "act_batch", None, "act_heads", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))  # [H] < 0
+    chunk = min(cfg.ssm_chunk, x.shape[1])
+    while x.shape[1] % chunk:  # chunk must divide the sequence length
+        chunk -= 1
+    y, ssd_state = _ssd_chunked(
+        xh.astype(jnp.float32), dt, a, bmat.astype(jnp.float32), cmat.astype(jnp.float32),
+        chunk, ssd_state,
+    )
+    y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], x.shape[1], di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype), (conv_state, ssd_state)
+
+
+def ssm_decode(params, x: jnp.ndarray, cfg: LMConfig, conv_state, ssd_state):
+    """Single-token decode.  x [B,1,D]; states carried O(1) in context."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    b = x.shape[0]
+    z, xbc, dt = _split_in(params, x, cfg)
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], conv_state)
+    xi, bmat, cmat = jnp.split(xbc[:, 0], [di, di + n], axis=-1)
+    xh = xi.reshape(b, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))  # [B,H]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # [B,H]
+    upd = jnp.einsum("bhp,bn->bhpn", xh * dt[..., None], bmat.astype(jnp.float32))
+    ssd_state = ssd_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", cmat.astype(jnp.float32), ssd_state)
+    y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["w_out"].astype(x.dtype), (conv_state, ssd_state)
+
+
+def init_ssm_cache(cfg: LMConfig, batch: int, dtype):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    conv = jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_ch), dtype)
+    ssd = jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)
+    return conv, ssd

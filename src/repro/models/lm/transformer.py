@@ -1,0 +1,334 @@
+"""Composable decoder stack for the assigned architectures.
+
+Layers are grouped into *superblocks* (one period of cfg.block_pattern)
+and scanned with `jax.lax.scan` so the compiled HLO stays O(1) in depth —
+essential for compiling 64-layer 314B configs in the dry-run.  Remainder
+layers (pattern not dividing num_layers, e.g. recurrentgemma's 38 = 12×3+2)
+run unrolled after the scan.
+
+Every forward mode shares the block implementations:
+  * forward()      — full sequence (training / prefill), returns logits
+  * decode_step()  — one token against carried caches (serving)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ...dist.sharding import shard
+from .attention import (
+    AttnCache,
+    attention_decode,
+    attention_forward,
+    attention_specs,
+    init_attn_cache,
+)
+from .config import LMConfig
+from .layers import P, init_from_specs, axes_from_specs, mrope_angles, rms_norm, rope_angles
+from .mlp import mlp_forward, mlp_specs
+from .moe import moe_forward, moe_specs
+from .rglru import init_rglru_cache, rglru_decode, rglru_forward, rglru_specs
+from .ssm import init_ssm_cache, ssm_decode, ssm_forward, ssm_specs
+
+
+def vocab_padded(cfg: LMConfig) -> int:
+    return ((cfg.vocab_size + 255) // 256) * 256
+
+
+def _block_specs(cfg: LMConfig, pat: str, layers: int | None) -> dict:
+    d = cfg.d_model
+    lead = () if layers is None else (layers,)
+    lx = () if layers is None else ("layers",)
+    norm = lambda: P(lead + (d,), lx + (None,), init="ones")
+    if pat in ("attn", "local"):
+        mixer = {"norm1": norm(), "attn": attention_specs(cfg, layers=layers)}
+        if cfg.is_moe:
+            mixer.update(norm2=norm(), moe=moe_specs(cfg, layers=layers))
+        else:
+            mixer.update(norm2=norm(), mlp=mlp_specs(cfg, layers=layers))
+        return mixer
+    if pat == "ssm":
+        return {"norm1": norm(), "ssm": ssm_specs(cfg, layers=layers)}
+    if pat == "rglru":
+        return {
+            "norm1": norm(),
+            "rglru": rglru_specs(cfg, layers=layers),
+            "norm2": norm(),
+            "mlp": mlp_specs(cfg, layers=layers),
+        }
+    raise ValueError(pat)
+
+
+def _layout(cfg: LMConfig) -> tuple[int, int]:
+    period = len(cfg.block_pattern)
+    return cfg.num_layers // period, cfg.num_layers % period
+
+
+def decoder_specs(cfg: LMConfig) -> dict:
+    n_super, rem = _layout(cfg)
+    vp = vocab_padded(cfg)
+    specs: dict[str, Any] = {
+        "embed": P((vp, cfg.d_model), ("vocab", "embed"), scale=0.02),
+        "final_norm": P((cfg.d_model,), (None,), init="ones"),
+    }
+    if n_super > 0:
+        specs["scan"] = {
+            f"pos{i}": _block_specs(cfg, pat, n_super)
+            for i, pat in enumerate(cfg.block_pattern)
+        }
+    if rem:
+        specs["tail"] = [
+            _block_specs(cfg, cfg.block_pattern[i], None) for i in range(rem)
+        ]
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P((cfg.d_model, vp), ("embed", "vocab"), scale=0.02)
+    return specs
+
+
+def init_decoder(cfg: LMConfig, rng: jax.Array):
+    dtype = jnp.dtype(cfg.param_dtype)
+    return init_from_specs(decoder_specs(cfg), rng, dtype)
+
+
+def decoder_axes(cfg: LMConfig):
+    return axes_from_specs(decoder_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _angles(cfg: LMConfig, positions: jnp.ndarray) -> jnp.ndarray | None:
+    if cfg.m_rope:
+        return mrope_angles(positions, cfg.head_dim, cfg.rope_theta, cfg.m_rope_sections)
+    return rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+
+
+def _block_forward(cfg: LMConfig, pat: str, p: dict, h: jnp.ndarray, angles, impl: str):
+    """One block, full-sequence.  Returns (h, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if pat in ("attn", "local"):
+        win = cfg.window if pat == "local" else None
+        a = attention_forward(
+            p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg,
+            angles=angles, window=win, impl=impl,
+        )
+        h = h + a
+        x = rms_norm(h, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            m, aux = moe_forward(p["moe"], x, cfg)
+        else:
+            m = mlp_forward(p["mlp"], x, cfg)
+        h = h + m
+    elif pat == "ssm":
+        y, _ = ssm_forward(p["ssm"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg)
+        h = h + y
+    elif pat == "rglru":
+        y, _ = rglru_forward(p["rglru"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg)
+        h = h + y
+        h = h + mlp_forward(p["mlp"], rms_norm(h, p["norm2"], cfg.norm_eps), cfg)
+    h = shard(h, "act_batch", "act_seq", "act_embed")
+    return h, aux
+
+
+def _block_decode(cfg: LMConfig, pat: str, p: dict, h, angles, cache, cache_pos):
+    """One block, single token.  cache is pattern-specific; returns new cache."""
+    if pat in ("attn", "local"):
+        win = cfg.window if pat == "local" else None
+        a, cache_a = attention_decode(
+            p["attn"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg,
+            cache, cache_pos, angles=angles, window=win,
+        )
+        h = h + a
+        x = rms_norm(h, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            m, _ = moe_forward(p["moe"], x, cfg)
+        else:
+            m = mlp_forward(p["mlp"], x, cfg)
+        return h + m, cache_a
+    if pat == "ssm":
+        conv, ssd = cache
+        y, (conv, ssd) = ssm_decode(p["ssm"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg, conv, ssd)
+        return h + y, (conv, ssd)
+    if pat == "rglru":
+        conv, hs = cache
+        y, (conv, hs) = rglru_decode(p["rglru"], rms_norm(h, p["norm1"], cfg.norm_eps), cfg, conv, hs)
+        h = h + y
+        h = h + mlp_forward(p["mlp"], rms_norm(h, p["norm2"], cfg.norm_eps), cfg)
+        return h, (conv, hs)
+    raise ValueError(pat)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: LMConfig, tokens: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)
+    return h
+
+
+def logits_from_hidden(params, cfg: LMConfig, h: jnp.ndarray) -> jnp.ndarray:
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T.astype(h.dtype)
+    else:
+        logits = h @ params["lm_head"].astype(h.dtype)
+    return shard(logits, "act_batch", "act_seq", "act_vocab")
+
+
+def forward(
+    params: dict,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,                 # [B, S] int32
+    *,
+    positions: jnp.ndarray | None = None,  # [B, S] or [B, S, 3] (m_rope)
+    visual_embeds: jnp.ndarray | None = None,  # [B, n_vis, D] stub frontend output
+    impl: str = "xla",
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (logits [B, S, vocab_padded], aux_loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        positions = (
+            jnp.broadcast_to(pos[..., None], (b, s, 3)) if cfg.m_rope else pos
+        )
+    angles = _angles(cfg, positions)
+
+    h = embed_tokens(params, cfg, tokens)
+    if visual_embeds is not None:
+        # stub modality frontend: precomputed patch/frame embeddings occupy
+        # the first n_vis slots (input_specs provides them per the brief)
+        nv = visual_embeds.shape[1]
+        h = jnp.concatenate([visual_embeds.astype(h.dtype), h[:, nv:]], axis=1)
+    h = shard(h, "act_batch", "act_seq", "act_embed")
+
+    n_super, rem = _layout(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    if n_super > 0:
+        def superblock(carry, sp):
+            hh, aux = carry
+            for i, pat in enumerate(cfg.block_pattern):
+                hh, a = _block_forward(cfg, pat, sp[f"pos{i}"], hh, angles, impl)
+                aux = aux + a
+            return (hh, aux), None
+
+        if cfg.remat == "full":
+            superblock = jax.checkpoint(
+                superblock, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        elif cfg.remat == "dots":
+            superblock = jax.checkpoint(
+                superblock,
+                policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            )
+        (h, aux_total), _ = jax.lax.scan(superblock, (h, aux_total), params["scan"])
+    for i in range(rem):
+        h, a = _block_forward(
+            cfg, cfg.block_pattern[i], params["tail"][i], h, angles, impl
+        )
+        aux_total = aux_total + a
+    return logits_from_hidden(params, cfg, h), aux_total
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving)
+# ---------------------------------------------------------------------------
+
+def _cache_for(cfg: LMConfig, pat: str, batch: int, cache_len: int, dtype):
+    if pat in ("attn", "local"):
+        eff_cfg = cfg if pat == "attn" else dataclasses.replace(cfg, window=cfg.window)
+        c = init_attn_cache(eff_cfg, batch, cache_len, dtype)
+        if pat == "attn":
+            c = AttnCache(
+                k=jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+                v=jnp.zeros((batch, cache_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+                pos=jnp.full((batch, cache_len), -1, jnp.int32),
+            )
+        return c
+    if pat == "ssm":
+        return init_ssm_cache(cfg, batch, dtype)
+    if pat == "rglru":
+        return init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(pat)
+
+
+def init_caches(cfg: LMConfig, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    """Stacked caches matching the scan layout + tail list."""
+    n_super, rem = _layout(cfg)
+    caches: dict[str, Any] = {}
+    if n_super > 0:
+        caches["scan"] = {
+            f"pos{i}": jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x[None], (n_super,) + x.shape),
+                _cache_for(cfg, pat, batch, cache_len, dtype),
+            )
+            for i, pat in enumerate(cfg.block_pattern)
+        }
+    if rem:
+        caches["tail"] = [
+            _cache_for(cfg, cfg.block_pattern[i], batch, cache_len, dtype)
+            for i in range(rem)
+        ]
+    return caches
+
+
+def mark_cache_filled(caches, cache_pos: int):
+    """Mark attention cache slots [0, cache_pos) as holding real history —
+    used to lower decode-with-full-cache without running a real prefill."""
+    def fix(x):
+        if isinstance(x, AttnCache):
+            n = x.pos.shape[-1]
+            pos = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), x.pos.shape)
+            pos = jnp.where(pos < cache_pos, pos, -1)
+            return AttnCache(k=x.k, v=x.v, pos=pos)
+        return x
+
+    return jax.tree_util.tree_map(fix, caches, is_leaf=lambda x: isinstance(x, AttnCache))
+
+
+def decode_step(
+    params: dict,
+    cfg: LMConfig,
+    tokens: jnp.ndarray,      # [B, 1]
+    cache_pos: jnp.ndarray,   # scalar int32
+    caches,
+) -> tuple[jnp.ndarray, Any]:
+    """One decode step: returns (logits [B, 1, vocab_padded], new caches)."""
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(cache_pos, (b, 1)).astype(jnp.int32)
+    positions = jnp.broadcast_to(pos[..., None], (b, 1, 3)) if cfg.m_rope else pos
+    angles = _angles(cfg, positions)
+
+    h = embed_tokens(params, cfg, tokens)
+    n_super, rem = _layout(cfg)
+    new_caches: dict[str, Any] = {}
+    if n_super > 0:
+        def superblock(hh, xs):
+            sp, sc = xs
+            out_caches = {}
+            for i, pat in enumerate(cfg.block_pattern):
+                hh, nc = _block_decode(
+                    cfg, pat, sp[f"pos{i}"], hh, angles, sc[f"pos{i}"], cache_pos
+                )
+                out_caches[f"pos{i}"] = nc
+            return hh, out_caches
+
+        h, new_scan = jax.lax.scan(superblock, h, (params["scan"], caches["scan"]))
+        new_caches["scan"] = new_scan
+    if rem:
+        tail = []
+        for i in range(rem):
+            h, nc = _block_decode(
+                cfg, cfg.block_pattern[i], params["tail"][i], h, angles,
+                caches["tail"][i], cache_pos,
+            )
+            tail.append(nc)
+        new_caches["tail"] = tail
+    return logits_from_hidden(params, cfg, h), new_caches

@@ -1,0 +1,10 @@
+from .adamw import AdamWConfig, init_opt_state, apply_updates, opt_state_axes
+from .schedules import warmup_cosine
+
+__all__ = [
+    "AdamWConfig",
+    "init_opt_state",
+    "apply_updates",
+    "opt_state_axes",
+    "warmup_cosine",
+]

@@ -1,0 +1,20 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    step: jnp.ndarray,
+    *,
+    peak_lr: float,
+    warmup_steps: int = 1000,
+    total_steps: int = 100_000,
+    min_ratio: float = 0.1,
+) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return peak_lr * jnp.where(step < warmup_steps, warm, cos)

@@ -1,0 +1,3 @@
+from .engine import ServeState, make_prefill, make_serve_step, init_serve_state
+
+__all__ = ["ServeState", "make_prefill", "make_serve_step", "init_serve_state"]

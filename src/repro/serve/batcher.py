@@ -1,0 +1,146 @@
+"""Continuous batching: slot-based request scheduling over a fixed batch.
+
+Production serving keeps the decode batch full by admitting new requests
+into slots as old ones finish — the decode step itself never recompiles
+(static shapes).  Per-slot position counters ride in the cache `pos`
+arrays (attention masks are per-slot valid-position tests, so slots at
+different depths coexist in one batched step).
+
+This is the HiHGNN workload-balance idea at the serving layer: slots are
+lanes, the admission queue is the overflow-workload list, and the
+scheduler keeps every lane busy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.lm.api import LMApi
+from .engine import ServeState, init_serve_state, make_serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batcher (greedy decoding).
+
+    Limitations of this reference implementation: prompts are injected by
+    stepping them token-by-token through the slot (prefill == decode
+    path), which is latency-suboptimal but keeps one compiled program;
+    a production variant would add a separate batched prefill program.
+    """
+
+    def __init__(self, api: LMApi, num_slots: int, cache_len: int, params):
+        self.api = api
+        self.params = params
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        # per-slot serving state: independent caches stacked on batch dim
+        self.state = init_serve_state(api, num_slots, cache_len, dtype=jnp.float32)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.slot_pos = np.zeros(num_slots, np.int64)  # per-slot abs position
+        self.slot_pending: list[list[int]] = [[] for _ in range(num_slots)]
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._step = self._build_step()
+
+    def _build_step(self) -> Callable:
+        serve = make_serve_step(self.api)
+        cfg = self.api.cfg
+
+        def step(params, state: ServeState, tokens, slot_positions):
+            # per-slot positions: we step all slots with the *max* position
+            # as cache_pos and rely on the per-slot pos arrays in the cache
+            # for masking; slots write at their own ring positions via the
+            # shared counter. Reference impl: one shared counter (slots
+            # admitted at the current global position).
+            logits, new_state = serve(params, state, tokens)
+            nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+            return nxt, new_state
+
+        return jax.jit(step)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _reset_slot(self, s: int) -> None:
+        """Invalidate slot s's cache rows so a newly admitted request never
+        attends to the previous occupant (pos -1 == masked; states zeroed).
+        The slot (batch) dim is located by size: dim 1 for scan-stacked
+        leaves [n_layers, B, ...], dim 0 for unstacked [B, ...]."""
+        B = self.num_slots
+
+        def reset(x):
+            dim = 1 if x.ndim > 1 and x.shape[1] == B and x.shape[0] != B else 0
+            if x.shape[dim] != B:
+                return x
+            idx = (slice(None),) * dim + (s,)
+            if jnp.issubdtype(x.dtype, jnp.integer):
+                return x.at[idx].set(-1)
+            return x.at[idx].set(0)
+
+        self.state = ServeState(
+            caches=jax.tree_util.tree_map(reset, self.state.caches),
+            cache_pos=self.state.cache_pos,
+            cross_kv=self.state.cross_kv,
+        )
+
+    def _admit(self) -> None:
+        for s in range(self.num_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self._reset_slot(s)
+                self.slot_req[s] = req
+                self.slot_pending[s] = list(req.prompt)
+
+    def step(self) -> int:
+        """One batched decode step across all slots; returns #active."""
+        self._admit()
+        tokens = np.zeros((self.num_slots, 1), np.int32)
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            if self.slot_pending[s]:
+                tokens[s, 0] = self.slot_pending[s].pop(0)
+            elif req.out:
+                tokens[s, 0] = req.out[-1]
+            else:
+                tokens[s, 0] = req.prompt[-1]
+        nxt, self.state = self._step(
+            self.params, self.state, jnp.asarray(tokens), None
+        )
+        nxt = np.asarray(nxt)
+        active = 0
+        for s in range(self.num_slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            active += 1
+            if not self.slot_pending[s]:  # prompt fully injected -> emit
+                req.out.append(int(nxt[s]))
+                if req.done:
+                    self.finished.append(req)
+                    self.slot_req[s] = None
+        return active
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.slot_req)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished

@@ -1,0 +1,113 @@
+"""Serving engine: batched prefill + decode with carried caches.
+
+``serve_step`` is the unit the decode_* / long_* dry-run cells lower: one
+new token for every sequence in the batch against a KV cache of
+``cache_len`` (full attention), a ring buffer (local attention) or O(1)
+recurrent state (SSM / RG-LRU) — the sub-quadratic archs' long_500k cells
+compile to context-independent state updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import encdec
+from ..models.lm.api import LMApi
+from ..models.lm.transformer import mark_cache_filled
+
+
+@dataclasses.dataclass
+class ServeState:
+    caches: Any
+    cache_pos: jnp.ndarray  # scalar int32
+    cross_kv: Any = None    # enc-dec only
+
+
+jax.tree_util.register_pytree_node(
+    ServeState,
+    lambda s: ((s.caches, s.cache_pos, s.cross_kv), None),
+    lambda _, ch: ServeState(*ch),
+)
+
+
+def init_serve_state(
+    api: LMApi, batch: int, cache_len: int, *, dtype=jnp.bfloat16, filled: int = 0
+) -> ServeState:
+    caches = api.init_caches(batch, cache_len, dtype)
+    if filled:
+        caches = mark_cache_filled(caches, filled)
+    cross = None
+    if api.cfg.is_encoder_decoder:
+        # placeholder cross-KV until prefill computes it from real frames
+        cross = (
+            jnp.zeros(
+                (api.cfg.num_layers, batch, api.cfg.encoder_seq, api.cfg.num_kv_heads, api.cfg.head_dim),
+                dtype,
+            ),
+            jnp.zeros(
+                (api.cfg.num_layers, batch, api.cfg.encoder_seq, api.cfg.num_kv_heads, api.cfg.head_dim),
+                dtype,
+            ),
+        )
+    return ServeState(caches=caches, cache_pos=jnp.asarray(filled, jnp.int32), cross_kv=cross)
+
+
+def make_serve_step(api: LMApi) -> Callable:
+    """(params, state, tokens [B,1]) -> (logits [B, vocab_pad], state)."""
+    cfg = api.cfg
+
+    def serve_step(params, state: ServeState, tokens: jnp.ndarray):
+        kw = {}
+        if cfg.is_encoder_decoder:
+            kw["cross_kv"] = state.cross_kv
+        logits, caches = api.decode(params, tokens, state.cache_pos, state.caches, **kw)
+        return logits[:, 0], ServeState(
+            caches=caches, cache_pos=state.cache_pos + 1, cross_kv=state.cross_kv
+        )
+
+    return serve_step
+
+
+def make_prefill(api: LMApi) -> Callable:
+    """(params, state, tokens [B,S]) -> (last logits, state) — fills caches
+    by running decode steps under a scan (correct for every cache family)."""
+    serve_step = make_serve_step(api)
+    cfg = api.cfg
+
+    def prefill(params, state: ServeState, tokens: jnp.ndarray, frames=None):
+        if cfg.is_encoder_decoder:
+            enc_out = encdec.encode(params, cfg, frames)
+            cross = encdec.precompute_cross(params, cfg, enc_out)
+            state = ServeState(caches=state.caches, cache_pos=state.cache_pos, cross_kv=cross)
+
+        def step(carry, tok):
+            st = carry
+            logits, st = serve_step(params, st, tok[:, None])
+            return st, logits
+
+        state, logits_all = jax.lax.scan(step, state, tokens.T)
+        return logits_all[-1], state
+
+    return prefill
+
+
+def greedy_generate(api: LMApi, params, prompt: jnp.ndarray, steps: int, cache_len: int):
+    """Simple batched greedy decoding (examples/serve_lm.py)."""
+    b = prompt.shape[0]
+    state = init_serve_state(api, b, cache_len, dtype=jnp.float32)
+    prefill = make_prefill(api)
+    serve_step = make_serve_step(api)
+    kw = {}
+    if api.cfg.is_encoder_decoder:
+        kw["frames"] = jnp.zeros((b, api.cfg.encoder_seq, api.cfg.d_model), jnp.float32)
+    logits, state = prefill(params, state, prompt, **kw)
+    out = []
+    tok = jnp.argmax(logits[:, : api.cfg.vocab_size], axis=-1).astype(jnp.int32)
+    for _ in range(steps):
+        out.append(tok)
+        logits, state = serve_step(params, state, tok[:, None])
+        tok = jnp.argmax(logits[:, : api.cfg.vocab_size], axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)

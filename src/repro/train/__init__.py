@@ -1,0 +1,4 @@
+from .step import TrainState, make_train_step, lm_loss, train_state_axes
+from .loop import train_loop
+
+__all__ = ["TrainState", "make_train_step", "lm_loss", "train_state_axes", "train_loop"]

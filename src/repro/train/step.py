@@ -1,0 +1,161 @@
+"""Train-step builders for the LM architectures.
+
+Production features:
+  * microbatch gradient accumulation (scan) — grok/mamba2 activation fit
+  * grads sharding-constrained to the parameter layout inside the scan
+    (keeps the accumulator ZeRO-sharded instead of replicated)
+  * vocab-padding masked out of the loss
+  * MoE auxiliary load-balance loss folded in
+  * fp32 loss/grad-norm metrics regardless of compute dtype
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import active_rules
+from ..models.lm.api import LMApi
+from ..models.lm.transformer import vocab_padded
+from ..optim import AdamWConfig, apply_updates, init_opt_state, opt_state_axes
+from ..optim.schedules import warmup_cosine
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.step), None),
+    lambda _, ch: TrainState(*ch),
+)
+
+
+def init_train_state(api: LMApi, rng: jax.Array, opt_cfg: AdamWConfig) -> TrainState:
+    params = api.init(rng)
+    return TrainState(params=params, opt=init_opt_state(params, opt_cfg), step=jnp.zeros((), jnp.int32))
+
+
+def train_state_axes(api: LMApi, opt_cfg: AdamWConfig, params_abstract=None):
+    pax = api.axes()
+    return TrainState(
+        params=pax,
+        opt=opt_state_axes(pax, opt_cfg, params_abstract),
+        step=(),
+    )
+
+
+def lm_loss(api: LMApi, params, batch: dict) -> tuple[jnp.ndarray, dict]:
+    """Next-token CE with vocab padding masked; returns (loss, metrics)."""
+    cfg = api.cfg
+    tokens = batch["tokens"]  # [B, S+1]
+    inputs, targets = tokens[:, :-1], tokens[:, 1:]
+    kw = {}
+    if "frames" in batch:
+        kw["frames"] = batch["frames"]
+    if "positions" in batch:
+        kw["positions"] = batch["positions"]
+    if "visual_embeds" in batch:
+        kw["visual_embeds"] = batch["visual_embeds"]
+    logits, aux = api.forward(params, inputs, **kw)
+    vp = logits.shape[-1]
+    logits = logits.astype(jnp.float32)
+    if vp > cfg.vocab_size:  # mask padded vocab slots out of the softmax
+        pad_mask = jnp.arange(vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def _shard_like_params(grads, param_axes):
+    rules = active_rules()
+    if rules is None:
+        return grads
+    is_axes = lambda a: isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a)
+    return jax.tree_util.tree_map(
+        lambda a, g: jax.lax.with_sharding_constraint(g, rules.spec(a)),
+        param_axes, grads, is_leaf=is_axes,
+    )
+
+
+def make_train_step(
+    api: LMApi,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    lr_schedule: Callable[[jnp.ndarray], jnp.ndarray] | None = None,
+    grad_dtype: str | None = None,
+) -> Callable[[TrainState, dict], tuple[TrainState, dict]]:
+    """Build the (pjit-able) train step.  batch leaves are [B_global, ...].
+
+    ``grad_dtype="bfloat16"`` enables gradient compression: per-microbatch
+    gradients are cast to bf16 *before* the cross-shard reduction the SPMD
+    partitioner inserts, halving gradient-sync ICI bytes; the accumulator
+    stays fp32 (compression applies to the wire format only).
+    """
+    param_axes = api.axes()
+    sched = lr_schedule or (lambda s: warmup_cosine(s, peak_lr=opt_cfg.lr))
+    gdt = jnp.dtype(grad_dtype) if grad_dtype else None
+
+    def loss_fn(params, mb):
+        return lm_loss(api, params, mb)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.params, batch
+            )
+            if gdt is not None:  # gradient compression on the wire
+                grads = jax.tree_util.tree_map(lambda x: x.astype(gdt), grads)
+            grads = _shard_like_params(grads, param_axes)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            zero_g = _shard_like_params(zero_g, param_axes)
+
+            def acc(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (l, mx), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params, mb)
+                if gdt is not None:  # gradient compression on the wire
+                    g = jax.tree_util.tree_map(lambda x: x.astype(gdt), g)
+                # constrain only the accumulator: the per-microbatch grad is
+                # then free to be reduce-scattered directly into the carry
+                # layout (§Perf HC3 — double-constraining forced an extra
+                # replicated all-reduce per microbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda x, y: x + y.astype(jnp.float32), g_acc, g
+                )
+                g_acc = _shard_like_params(g_acc, param_axes)
+                return (g_acc, l_acc + mx["loss"], a_acc + mx["aux_loss"]), None
+
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                acc, (zero_g, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), mbs
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"loss": loss, "aux_loss": aux_sum / microbatches}
+
+        lr = sched(state.step)
+        new_params, new_opt, gnorm = apply_updates(
+            state.params, grads, state.opt, opt_cfg, lr
+        )
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return TrainState(params=new_params, opt=new_opt, step=state.step + 1), metrics
+
+    return train_step

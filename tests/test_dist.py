@@ -1,0 +1,80 @@
+"""Sharding rules, hlostats parser, serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from repro.dist.sharding import Rules, make_rules, shard, use_rules
+from repro.launch.hlostats import analyze
+
+
+def test_rules_spec_mapping():
+    r = make_rules(multi_pod=True, fsdp=True)
+    assert r.spec(("act_batch", None, "act_vocab")) == PartitionSpec(("pod", "data"), None, "model")
+    assert r.spec(("embed", "heads")) == PartitionSpec(("pod", "data"), "model")
+    r1 = make_rules(multi_pod=False, fsdp=True)
+    assert r1.spec(("embed", "heads")) == PartitionSpec("data", "model")
+    # duplicate mesh axis within one spec is dropped (axis used once)
+    assert r.spec(("heads", "mlp")) == PartitionSpec("model", None)
+    r2 = make_rules(batch_shard=False)
+    assert r2.spec(("act_batch", None)) == PartitionSpec(None, None)
+
+
+def test_shard_is_noop_without_rules():
+    x = jnp.ones((4, 4))
+    y = shard(x, "act_batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_hlostats_loop_correction_synthetic():
+    hlo = """
+HloModule test
+
+%cond (p: (s32[], f32[128,128])) -> pred[] {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %p = (s32[], f32[128,128]) parameter(0)
+  %x = f32[128,128] get-tuple-element(%p), index=1
+  %ar = f32[128,128]{1,0} all-reduce(%x), replica_groups={}
+  %d = f32[128,128]{1,0} dot(%ar, %ar), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,128]) tuple(%ni, %d)
+}
+
+ENTRY %main (a: f32[128,128]) -> f32[128,128] {
+  %a = f32[128,128] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[128,128]) tuple(%zero, %a)
+  %w = (s32[], f32[128,128]) while(%init), condition=%cond, body=%body
+  %ag = f32[256,128]{1,0} all-gather(%a), dimensions={0}
+  ROOT %out = f32[128,128] get-tuple-element(%w), index=1
+}
+"""
+    st = analyze(hlo)
+    assert st.while_trips == [12]
+    # all-reduce inside the loop: 128*128*4 bytes * 12
+    assert abs(st.collective_bytes["all-reduce"] - 128 * 128 * 4 * 12) < 1
+    # all-gather outside: counted once with its (result) size
+    assert abs(st.collective_bytes["all-gather"] - 256 * 128 * 4) < 1
+    # dot: 2*128^3 flops * 12
+    assert abs(st.dot_flops - 2 * 128**3 * 12) < 1
+
+
+def test_greedy_generate_runs():
+    from repro.configs import smoke_config
+    from repro.models.lm.api import build
+    from repro.serve.engine import greedy_generate
+
+    cfg = smoke_config("llama3.2-3b")
+    api = build(cfg)
+    params = api.init(jax.random.key(0))
+    out = greedy_generate(api, params, jnp.array([[1, 2, 3]], jnp.int32), steps=4, cache_len=12)
+    assert out.shape == (1, 4)
+    assert (np.asarray(out) >= 0).all() and (np.asarray(out) < cfg.vocab_size).all()

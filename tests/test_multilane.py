@@ -1,0 +1,68 @@
+"""Independency-aware parallel execution: multilane NA correctness +
+workload balancing effect."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import NABackend, batch_semantic_graph, neighbor_aggregate
+from repro.core.multilane import build_multilane_plan, multilane_na
+from repro.graphs import build_semantic_graphs, dataset_metapaths, synthetic_hetgraph
+
+
+@pytest.fixture(scope="module")
+def dblp_setup():
+    rng = np.random.default_rng(0)
+    g = synthetic_hetgraph("dblp", scale=0.05, feat_scale=0.1)
+    sgs = build_semantic_graphs(g, dataset_metapaths("dblp"))
+    B, H, Dh = 16, 2, 8
+    batches = [batch_semantic_graph(s, block=B) for s in sgs]
+    G = len(batches)
+    ns = batches[0].num_src
+    ns_pad = ((ns + B - 1) // B) * B
+    nd_pad = batches[0].num_dst_pad
+    hs = np.zeros((ns_pad, H, Dh), np.float32)
+    hs[:ns] = rng.standard_normal((ns, H, Dh))
+    ths = np.zeros((G, ns_pad, H), np.float32)
+    thd = np.zeros((G, nd_pad, H), np.float32)
+    for i in range(G):
+        ths[i, :ns] = rng.standard_normal((ns, H))
+        thd[i, :ns] = rng.standard_normal((ns, H))
+    return batches, jnp.asarray(ths), jnp.asarray(thd), jnp.asarray(hs)
+
+
+@pytest.mark.parametrize("lanes", [1, 2, 4, 8])
+def test_multilane_matches_reference_any_lane_count(dblp_setup, lanes):
+    batches, ths, thd, hs = dblp_setup
+    plan = build_multilane_plan(batches, lanes)
+    z = multilane_na(plan, ths, thd, hs)
+    for i, b in enumerate(batches):
+        ref = neighbor_aggregate(
+            b, ths[i, : b.num_src], thd[i, : b.num_dst], hs[: b.num_src],
+            backend=NABackend.SEGMENT,
+        )
+        np.testing.assert_allclose(
+            np.asarray(z[i, : b.num_dst]), np.asarray(ref), rtol=5e-5, atol=5e-5
+        )
+
+
+def test_balanced_beats_naive_on_skewed_workload(dblp_setup):
+    batches, *_ = dblp_setup
+    plan_b = build_multilane_plan(batches, 4, balanced=True)
+    plan_n = build_multilane_plan(batches, 4, balanced=False)
+    assert plan_b.lane_plan.imbalance() <= plan_n.lane_plan.imbalance()
+    # critical path (max lane load) strictly better on DBLP's skewed graphs
+    assert plan_b.lane_plan.lane_load.max() < plan_n.lane_plan.lane_load.max()
+
+
+def test_multilane_unbalanced_still_correct(dblp_setup):
+    batches, ths, thd, hs = dblp_setup
+    plan = build_multilane_plan(batches, 4, balanced=False)
+    z = multilane_na(plan, ths, thd, hs)
+    for i, b in enumerate(batches):
+        ref = neighbor_aggregate(
+            b, ths[i, : b.num_src], thd[i, : b.num_dst], hs[: b.num_src],
+            backend=NABackend.SEGMENT,
+        )
+        np.testing.assert_allclose(
+            np.asarray(z[i, : b.num_dst]), np.asarray(ref), rtol=5e-5, atol=5e-5
+        )

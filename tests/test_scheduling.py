@@ -1,0 +1,66 @@
+"""Scheduling properties: Hamilton path optimality, workload balance."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduling import (
+    brute_force_hamilton_path,
+    lane_assignment,
+    naive_lane_assignment,
+    shortest_hamilton_path,
+    similarity_matrix,
+)
+from repro.graphs import build_semantic_graphs, dataset_metapaths, synthetic_hetgraph
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_held_karp_equals_brute_force(n, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.random((n, n))
+    w = (w + w.T) / 2
+    np.fill_diagonal(w, 0)
+    order_hk, cost_hk = shortest_hamilton_path(w)
+    _, cost_bf = brute_force_hamilton_path(w)
+    assert sorted(order_hk) == list(range(n))  # visits every vertex once
+    assert abs(cost_hk - cost_bf) < 1e-9
+    # reported cost is consistent with the path itself
+    path_cost = sum(w[order_hk[i], order_hk[i + 1]] for i in range(n - 1))
+    assert abs(path_cost - cost_hk) < 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_lane_assignment_balances(data):
+    n_graphs = data.draw(st.integers(1, 5))
+    num_lanes = data.draw(st.integers(1, 8))
+    rng = np.random.default_rng(data.draw(st.integers(0, 999)))
+    row_costs = [
+        rng.integers(0, 100, size=rng.integers(1, 20)).astype(float)
+        for _ in range(n_graphs)
+    ]
+    plan = lane_assignment(row_costs, num_lanes)
+    naive = naive_lane_assignment(row_costs, num_lanes)
+    # every unit assigned to exactly one lane
+    assert (plan.unit_lane >= 0).all() and (plan.unit_lane < num_lanes).all()
+    assert plan.unit_cost.sum() == naive.unit_cost.sum()
+    # balanced assignment never worse than naive (max lane load)
+    assert plan.lane_load.max() <= naive.lane_load.max() + 1e-9
+    # no lane exceeds threshold by more than the largest single unit
+    total = plan.unit_cost.sum()
+    thresh = np.ceil(total / num_lanes)
+    biggest = plan.unit_cost.max() if plan.unit_cost.size else 0
+    assert plan.lane_load.max() <= thresh + biggest + 1e-9
+
+
+def test_similarity_matrix_paper_formula():
+    g = synthetic_hetgraph("acm", scale=0.05, feat_scale=0.1)
+    sgs = build_semantic_graphs(g, dataset_metapaths("acm"), max_edges=2000)
+    w = similarity_matrix(sgs, g.vertex_counts)
+    assert w.shape == (4, 4)
+    assert np.allclose(w, w.T) and np.allclose(np.diag(w), 0)
+    assert (w >= 0).all() and (w <= 1).all()
+    # PAP vs PPAP share {paper, author}; PAP vs PSP share only {paper}
+    i_pap = [s.name for s in sgs].index("PAP")
+    i_ppap = [s.name for s in sgs].index("PPAP")
+    i_psp = [s.name for s in sgs].index("PSP")
+    assert w[i_pap, i_ppap] < w[i_pap, i_psp]  # more shared types => lower weight

@@ -1,0 +1,119 @@
+"""Training substrate: convergence, fault tolerance, checkpoint semantics,
+elastic re-shard."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint, reshard_to
+from repro.configs import smoke_config
+from repro.data import SyntheticLMData
+from repro.models.lm.api import build
+from repro.optim import AdamWConfig
+from repro.train import make_train_step, train_loop
+from repro.train.step import init_train_state
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config("llama3.2-3b")
+    api = build(cfg)
+    opt = AdamWConfig(lr=1e-2, weight_decay=0.0)
+    step = make_train_step(api, opt, lr_schedule=lambda s: jnp.asarray(1e-2))
+    return cfg, api, opt, step
+
+
+def _data(cfg):
+    return SyntheticLMData(vocab_size=cfg.vocab_size, seq_len=16, global_batch=16, seed=7)
+
+
+def test_loss_decreases(setup):
+    cfg, api, opt, step = setup
+    state = init_train_state(api, jax.random.key(0), opt)
+    state, hist = train_loop(
+        state=state, train_step=step, data=_data(cfg), steps=50, log_every=10,
+        log=lambda s: None,
+    )
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.85, [h["loss"] for h in hist]
+
+
+def test_crash_resume_bit_identical(setup):
+    cfg, api, opt, step = setup
+    with tempfile.TemporaryDirectory() as d:
+        # uninterrupted run
+        s0 = init_train_state(api, jax.random.key(0), opt)
+        ref, _ = train_loop(
+            state=s0, train_step=step, data=_data(cfg), steps=25,
+            ckpt_dir=os.path.join(d, "a"), ckpt_every=10, log=lambda s: None,
+        )
+        # crashed run + resume
+        s1 = init_train_state(api, jax.random.key(0), opt)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            train_loop(
+                state=s1, train_step=step, data=_data(cfg), steps=25,
+                ckpt_dir=os.path.join(d, "b"), ckpt_every=10, crash_at=17,
+                log=lambda s: None,
+            )
+        s2 = init_train_state(api, jax.random.key(0), opt)
+        resumed, _ = train_loop(
+            state=s2, train_step=step, data=_data(cfg), steps=25,
+            ckpt_dir=os.path.join(d, "b"), ckpt_every=10, resume=True,
+            log=lambda s: None,
+        )
+        for x, y in zip(
+            jax.tree_util.tree_leaves(ref.params), jax.tree_util.tree_leaves(resumed.params)
+        ):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_checkpoint_atomicity(setup):
+    """A leftover .tmp dir from a crashed write must not be picked up."""
+    cfg, api, opt, step = setup
+    state = init_train_state(api, jax.random.key(0), opt)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 10, state, aux={"data": {"step": 10, "seed": 7}})
+        os.makedirs(os.path.join(d, "step_20.tmp"))  # simulated torn write
+        assert latest_step(d) == 10
+        restored, aux = restore_checkpoint(d, 10, state)
+        assert aux["data"]["step"] == 10
+        for x, y in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_elastic_reshard_roundtrip(setup):
+    """Checkpoints restore onto a different mesh layout (elastic restart)."""
+    from repro.launch.mesh import make_mesh
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    cfg, api, opt, step = setup
+    state = init_train_state(api, jax.random.key(0), opt)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, state, aux={})
+        restored, _ = restore_checkpoint(d, 1, state)
+        mesh = make_mesh((1, 1), ("data", "model"))  # "new" degenerate mesh
+        shardings = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, PartitionSpec()), restored
+        )
+        placed = reshard_to(restored, shardings)
+        for x, y in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(placed)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_microbatch_accumulation_matches_full_batch(setup):
+    """Grad accumulation must be arithmetically equivalent to one batch."""
+    cfg, api, opt, _ = setup
+    sched = lambda s: jnp.asarray(1e-2)
+    step1 = jax.jit(make_train_step(api, opt, microbatches=1, lr_schedule=sched))
+    step4 = jax.jit(make_train_step(api, opt, microbatches=4, lr_schedule=sched))
+    data = _data(cfg)
+    batch = data.next()
+    s0 = init_train_state(api, jax.random.key(0), opt)
+    a, ma = step1(s0, batch)
+    s0b = init_train_state(api, jax.random.key(0), opt)
+    b, mb = step4(s0b, batch)
+    np.testing.assert_allclose(float(ma["loss"]), float(mb["loss"]), rtol=1e-5)
+    for x, y in zip(jax.tree_util.tree_leaves(a.params), jax.tree_util.tree_leaves(b.params)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=5e-4, atol=5e-5)
