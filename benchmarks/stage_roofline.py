@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import stages
+from repro.launch.hlostats import normalize_cost_analysis
 from repro.graphs import build_semantic_graph, synthetic_hetgraph, to_padded_edges
 
 RIDGE_V5E = 197e12 / 819e9  # ≈ 240 FLOP/byte (bf16 MXU)
@@ -25,7 +26,7 @@ RIDGE_T4 = 8.1e12 / 300e9    # ≈ 27 FLOP/byte (the paper's Fig. 3 ridge)
 
 def _ai(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    cost = c.cost_analysis() or {}
+    cost = normalize_cost_analysis(c.cost_analysis())
     fl = float(cost.get("flops", 0.0))
     by = float(cost.get("bytes accessed", 1.0))
     return fl, by, fl / max(by, 1.0)

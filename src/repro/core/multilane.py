@@ -16,10 +16,13 @@ machinery of the accelerator.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
 from .fusion import SemanticGraphBatch
 from .scheduling import LanePlan, lane_assignment, naive_lane_assignment
@@ -205,3 +208,64 @@ def multilane_na(
     contrib = jnp.where(plan.valid[:, :, None, None, None], per_lane, 0.0)
     out = out.at[plan.graph_id, plan.dst_row].add(contrib)
     return out.reshape(g_n, plan.n_dst_blocks * plan.block, h_dim, dh)
+
+
+def multilane_na_sharded(
+    plan: MultiLanePlan,
+    theta_src: jnp.ndarray,  # [G, Ns_pad, H]
+    theta_dst: jnp.ndarray,  # [G, Nd_pad, H]
+    h_src: jnp.ndarray,      # [Ns_pad, H, Dh]
+    *,
+    mesh,
+    lane_axes: tuple[str, ...] = ("lane",),
+    edge_bias: jnp.ndarray | None = None,  # [G, H]
+    leaky_slope: float = 0.2,
+) -> jnp.ndarray:
+    """``multilane_na`` with the lane dimension dispatched over mesh chips.
+
+    The plan's lane axis is `shard_map`ped over ``lane_axes`` (paper
+    §4.2.1: adding hardware = adding devices to the lane axis).  Each
+    shard runs its local lanes' work units against the *replicated*
+    projected features — every lane gathers what it needs from the shared
+    FP output, the functional RAB of DESIGN.md §2 — and scatters into a
+    zero-initialised full dst space; a single psum over the lane axes is
+    the only cross-lane communication (the GSF barrier).
+
+    Numerically identical to ``multilane_na`` for any lane-axis size that
+    divides the plan's lane count (size 1 = the vmap path, exactly).
+    """
+    n_shards = math.prod(mesh.shape[a] for a in lane_axes)
+    assert plan.num_lanes % n_shards == 0, (plan.num_lanes, n_shards)
+    g_n, _, h_dim = theta_src.shape
+    if edge_bias is None:
+        edge_bias = jnp.zeros((g_n, h_dim), h_src.dtype)
+
+    lane_part = lane_axes[0] if len(lane_axes) == 1 else tuple(lane_axes)
+    lane_spec = lambda ndim: PartitionSpec(lane_part, *([None] * (ndim - 1)))
+    plan_specs = MultiLanePlan(
+        col_index=lane_spec(3),
+        masks=lane_spec(5),
+        graph_id=lane_spec(2),
+        dst_row=lane_spec(2),
+        valid=lane_spec(2),
+        block=plan.block,
+        num_graphs=plan.num_graphs,
+        n_dst_blocks=plan.n_dst_blocks,
+        lane_plan=None,
+    )
+    rep = PartitionSpec()
+
+    def local(plan_loc, ths, thd, hs, bias):
+        partial = multilane_na(
+            plan_loc, ths, thd, hs, edge_bias=bias, leaky_slope=leaky_slope
+        )
+        return jax.lax.psum(partial, lane_axes)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(plan_specs, rep, rep, rep, rep),
+        out_specs=rep,
+        check_rep=False,
+    )
+    return fn(plan, theta_src, theta_dst, h_src, edge_bias)

@@ -1,0 +1,26 @@
+"""Distribution subsystem: logical-axis sharding rules (DESIGN.md §5).
+
+``sharding`` maps *logical* tensor axes (``"embed"``, ``"act_batch"``,
+``"lane"``, ...) onto *physical* mesh axes (``"pod"``, ``"data"``,
+``"model"``, ``"lane"``).  Models annotate tensors with logical names
+only; which mesh axis (if any) a name lands on is decided once, at
+launch time, by ``make_rules`` — so the same model code runs 1-device
+CPU smoke tests and 512-chip multi-pod dry-runs unchanged.
+"""
+from .sharding import (
+    Rules,
+    active_rules,
+    make_rules,
+    param_shardings,
+    shard,
+    use_rules,
+)
+
+__all__ = [
+    "Rules",
+    "active_rules",
+    "make_rules",
+    "param_shardings",
+    "shard",
+    "use_rules",
+]

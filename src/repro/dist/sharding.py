@@ -1,0 +1,252 @@
+"""Logical-axis sharding rules — the one place physical layout is decided.
+
+Model code never names a mesh axis.  It annotates tensors with *logical*
+axes (``shard(h, "act_batch", None, "act_mlp")``; parameter specs carry
+``("embed", "heads")``) and the active :class:`Rules` — installed by the
+launcher with ``use_rules`` — translates those names to a
+``PartitionSpec`` over whatever mesh is in scope.  Outside a rules
+context every annotation is a no-op, which is what lets the full model
+stack run on a bare 1-CPU pytest without ever mentioning meshes.
+
+Rule construction (``make_rules``) encodes the parallelism postures of
+DESIGN.md §5:
+
+* ``"tp"``    — data-parallel batch × tensor-parallel weights (default);
+  ``fsdp=True`` additionally shards the ``embed`` dim of every weight
+  over the data axes (ZeRO-3); ``seq_shard=True`` sequence-shards
+  activations over ``model``.
+* ``"sp"``    — sequence parallelism: weights model-replicated,
+  activations sharded (batch over ``data``, sequence over ``model``).
+* ``"serve2d"`` — decode posture: weights stay resident (``embed`` over
+  ``data``, ``mlp``/``heads`` over ``model``), the batch is NOT sharded,
+  activation feature dims are.
+* ``"lanes"`` — the paper's independency-aware multi-lane execution
+  (HiHGNN §4.2): semantic-graph work units ride a dedicated ``lane``
+  mesh axis (see ``launch/mesh.py:make_lane_mesh`` and
+  ``core/multilane.py:multilane_na_sharded``), head/feature dims ride
+  ``model``.
+
+Compounding and conflict rules (pinned by tests/test_dist.py):
+
+* multi-pod compounds the data axes: ``("pod", "data")`` acts as one
+  logical data dimension and appears as a tuple entry in the spec;
+* within a single spec each mesh axis is used at most once — a logical
+  axis whose mesh axes were already consumed maps to ``None`` (the
+  duplicate is dropped, first occurrence wins);
+* ``batch_shard=False`` gates ``act_batch`` off entirely (1-device
+  smoke, or global batch not divisible by the data axes).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import NamedSharding, PartitionSpec
+
+# Logical parameter axes that ride the tensor-parallel `model` mesh axis
+# under the "tp" posture.  Everything not named in a table replicates.
+_MODEL_PARAM_AXES = (
+    "heads",
+    "kv_heads",
+    "mlp",
+    "vocab",
+    "experts",
+    "ssm_inner",
+    "rnn",
+)
+
+# Activation counterparts (the `act_` namespace keeps activation layout
+# decisions independent of weight layout — serve2d shards one without
+# the other).
+_MODEL_ACT_AXES = ("act_heads", "act_mlp", "act_vocab", "act_experts")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Immutable logical-axis → mesh-axes table with spec translation.
+
+    ``table`` maps a logical axis name to a tuple of mesh axis names
+    (compound axes allowed, e.g. ``("pod", "data")``) or ``None`` for
+    replicated.  Unknown names are replicated — annotating model code
+    with a new logical axis is always safe before any rule names it.
+    """
+
+    table: dict[str, tuple[str, ...] | None]
+    name: str = "tp"
+
+    def spec(self, axes: tuple[str | None, ...]) -> PartitionSpec:
+        """Translate a logical-axes tuple into a PartitionSpec.
+
+        Each mesh axis is used at most once per spec: later logical axes
+        whose mesh axes were already consumed collapse to ``None``.
+        """
+        used: set[str] = set()
+        parts: list[str | tuple[str, ...] | None] = []
+        for name in axes:
+            mesh_axes = self.table.get(name) if name is not None else None
+            if not mesh_axes:
+                parts.append(None)
+                continue
+            fresh = tuple(a for a in mesh_axes if a not in used)
+            used.update(fresh)
+            if not fresh:
+                parts.append(None)
+            elif len(fresh) == 1:
+                parts.append(fresh[0])
+            else:
+                parts.append(fresh)
+        return PartitionSpec(*parts)
+
+    def mesh_axes(self, name: str) -> tuple[str, ...] | None:
+        """Mesh axes backing one logical axis (None = replicated)."""
+        return self.table.get(name)
+
+
+def make_rules(
+    *,
+    multi_pod: bool = False,
+    fsdp: bool = False,
+    seq_shard: bool = False,
+    batch_shard: bool = True,
+    parallelism: str = "tp",
+) -> Rules:
+    """Build the Rules for one launch posture (see module docstring)."""
+    data: tuple[str, ...] = ("pod", "data") if multi_pod else ("data",)
+    model: tuple[str, ...] = ("model",)
+    lane: tuple[str, ...] = ("pod", "lane") if multi_pod else ("lane",)
+
+    table: dict[str, tuple[str, ...] | None]
+    if parallelism == "tp":
+        table = {
+            "act_batch": data if batch_shard else None,
+            "act_seq": model if seq_shard else None,
+            "act_qseq": model if seq_shard else None,
+            "act_embed": None,
+            "embed": data if fsdp else None,
+            "layers": None,
+        }
+        table.update({a: model for a in _MODEL_PARAM_AXES})
+        table.update({a: model for a in _MODEL_ACT_AXES})
+    elif parallelism == "sp":
+        # Sequence parallelism: weights model-replicated, activations
+        # carry all the sharding (batch over data, sequence over model).
+        table = {
+            "act_batch": data if batch_shard else None,
+            "act_seq": model,
+            "act_qseq": model,
+            "act_embed": None,
+            "embed": data if fsdp else None,
+            "layers": None,
+        }
+        table.update({a: None for a in _MODEL_PARAM_AXES})
+        table.update({a: None for a in _MODEL_ACT_AXES})
+    elif parallelism == "serve2d":
+        # Decode posture: weights resident in a 2D (data × model) layout,
+        # batch replicated (small decode batches), activation feature
+        # dims sharded instead.
+        table = {
+            "act_batch": None,
+            "act_seq": None,
+            "act_qseq": None,
+            "act_embed": data,
+            "embed": data,
+            "layers": None,
+        }
+        table.update({a: model for a in _MODEL_PARAM_AXES})
+        table.update({a: model for a in _MODEL_ACT_AXES})
+    elif parallelism == "lanes":
+        # HiHGNN §4.2 multi-lane execution: (semantic graph, dst block
+        # row) units ride the `lane` axis; head/feature dims ride
+        # `model`.  Vertex/batch-space tensors replicate — every lane
+        # gathers the projected features it needs (functional RAB,
+        # DESIGN.md §2).  Lane meshes (make_lane_mesh) have no `data`
+        # axis, so nothing may map to it here.
+        table = {
+            "lane": lane,
+            "act_lane": lane,
+            "act_vertex": None,
+            "act_graph": None,
+            "act_feat": model,
+            "act_batch": None,
+            "embed": None,
+            "layers": None,
+        }
+        table.update({a: model for a in _MODEL_PARAM_AXES})
+        table.update({a: model for a in _MODEL_ACT_AXES})
+    else:
+        raise ValueError(f"unknown parallelism {parallelism!r}")
+    return Rules(table=table, name=parallelism)
+
+
+# ---------------------------------------------------------------------------
+# Active-rules context.  Thread-local so concurrent lowering (e.g. the
+# dry-run sweeping cells from a pool) can't leak rules across threads.
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def active_rules() -> Rules | None:
+    """The innermost ``use_rules`` Rules, or None outside any context."""
+    stack = getattr(_state, "stack", None)
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    """Install ``rules`` as the ambient sharding rules for the block.
+
+    Nests: the innermost rules win, and the previous rules are restored
+    on exit (including on exceptions).
+    """
+    stack = getattr(_state, "stack", None)
+    if stack is None:
+        stack = _state.stack = []
+    stack.append(rules)
+    try:
+        yield rules
+    finally:
+        stack.pop()
+
+
+def _context_mesh():
+    """The mesh installed by ``with mesh:`` — None when there isn't one."""
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+def shard(x, *axes: str | None):
+    """Constrain ``x`` to the active rules' layout for ``axes``.
+
+    No-op unless both a rules context (``use_rules``) and a mesh context
+    (``with mesh:``) are active — model code calls this unconditionally
+    and single-process tests pay nothing.
+    """
+    rules = active_rules()
+    if rules is None:
+        return x
+    mesh = _context_mesh()
+    if mesh is None:
+        return x
+    spec = rules.spec(tuple(axes))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _is_axes_leaf(a) -> bool:
+    return isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a)
+
+
+def param_shardings(mesh, rules: Rules, axes):
+    """Map a logical-axes pytree to NamedShardings on ``mesh``.
+
+    ``axes`` is the tree produced by ``api.axes()`` /
+    ``train_state_axes``: leaves are tuples of logical axis names (or
+    None) — one entry per tensor dim, ``()`` for scalars.  ``None``
+    subtrees (absent optimizer slots) pass through untouched.
+    """
+    return jax.tree_util.tree_map(
+        lambda a: NamedSharding(mesh, rules.spec(a)), axes, is_leaf=_is_axes_leaf
+    )

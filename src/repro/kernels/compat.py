@@ -1,0 +1,11 @@
+"""Pallas-TPU API compatibility.
+
+`TPUCompilerParams` (jax <= 0.4.x / 0.5.x) was renamed to
+`CompilerParams` in newer releases; resolve whichever this jax ships so
+the kernels build against both.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(
     x_ref,      # [BN, BK]
@@ -113,7 +115,7 @@ def fused_fp_coeff(
             jax.ShapeDtypeStruct((n, heads), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bn, hdh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

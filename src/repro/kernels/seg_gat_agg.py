@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -158,7 +160,7 @@ def seg_gat_agg(
         functools.partial(_kernel, leaky_slope=leaky_slope),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((R * B, H, Dh), h_src.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -141,7 +143,7 @@ def seg_gat_agg_multigraph(
         functools.partial(_kernel, leaky_slope=leaky_slope),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((U * B, H, Dh), h_src.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,

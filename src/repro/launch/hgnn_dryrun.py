@@ -1,8 +1,10 @@
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 # Production-scale dry-run of the paper's OWN technique: multi-lane HGNN
-# NA+GSF with lanes sharded over the `data` mesh axis (one lane group per
-# chip column — the accelerator's scale-up §4.2 mapped onto a pod).
+# NA+GSF with lanes sharded over a dedicated `lane` mesh axis (one lane
+# group per chip column — the accelerator's scale-up §4.2 mapped onto a
+# pod).  Layout comes from the "lanes" sharding rules (DESIGN.md §5),
+# consumed exactly the way the LM launch path consumes its rules.
 
 import argparse
 import json
@@ -12,11 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core.multilane import MultiLanePlan, multilane_na
+from ..core.multilane import MultiLanePlan, multilane_na, multilane_na_sharded
 from ..core.scheduling import LanePlan
 from ..core import stages
+from ..dist.sharding import make_rules, use_rules
 from .hlostats import analyze
-from .mesh import make_production_mesh
+from .mesh import make_lane_mesh
 
 PEAK_FLOPS = 197e12
 ICI_BW = 50e9
@@ -84,12 +87,20 @@ def main():
     ap.add_argument("--width", type=int, default=16, help="blocks per row")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--schedule", choices=("balanced", "aligned"), default="balanced")
+    ap.add_argument(
+        "--executor", choices=("spmd", "shard_map"), default="spmd",
+        help="balanced schedule only: partitioner-placed (jit in_shardings) "
+        "or explicit shard_map over the lane axis",
+    )
     ap.add_argument("--out", default="artifacts/dryrun/hgnn_multilane.json")
     args = ap.parse_args()
+    if args.schedule == "aligned" and args.executor != "spmd":
+        ap.error("--executor shard_map only applies to --schedule balanced")
 
     block = 128
     rows = args.vertices // block
-    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh = make_lane_mesh(multi_pod=args.multi_pod)
+    rules = make_rules(multi_pod=args.multi_pod, parallelism="lanes")
     lanes = 32 * 16 if args.multi_pod else 16 * 16  # one lane per chip
     units = rows * args.graphs // lanes
     g, h_dim, dh = args.graphs, args.heads, args.dh
@@ -103,8 +114,15 @@ def main():
     w_g = jax.ShapeDtypeStruct((h_dim * dh, 128), jnp.float32)
     q = jax.ShapeDtypeStruct((128,), jnp.float32)
 
+    lane_axis = rules.mesh_axes("act_lane")
+
     def lane_step(plan, th_s, th_d, h_src, w_g, q):
-        z = multilane_na(plan, th_s, th_d, h_src.astype(jnp.float32))  # [G, N, H, Dh]
+        na = (
+            (lambda p, a, b, c: multilane_na_sharded(p, a, b, c, mesh=mesh, lane_axes=lane_axis))
+            if args.executor == "shard_map"
+            else multilane_na
+        )
+        z = na(plan, th_s, th_d, h_src.astype(jnp.float32))  # [G, N, H, Dh]
         zf = z.reshape(g, ns_pad, h_dim * dh)
         valid = jnp.ones((ns_pad,), bool)
         w_p = jnp.stack([
@@ -114,10 +132,10 @@ def main():
         fused, beta = stages.global_semantic_fusion(w_p, zf)
         return fused, beta
 
-    lane_axis = ("pod", "data") if args.multi_pod else ("data",)
-    lane_sh = lambda *rest: NamedSharding(mesh, P(lane_axis if len(lane_axis) > 1 else lane_axis[0], *rest))
+    lane_sh = lambda *rest: NamedSharding(mesh, rules.spec(("act_lane",) + rest))
+    feat_sh = NamedSharding(mesh, rules.spec((None, None, "act_feat")))
     rep = NamedSharding(mesh, P())
-    with mesh:
+    with mesh, use_rules(rules):
         if args.schedule == "aligned":
             u_r = rows // lanes
             col_abs = jax.ShapeDtypeStruct((lanes, u_r, g, args.width), jnp.int32)
@@ -129,7 +147,7 @@ def main():
                 in_shardings=(
                     lane_sh(None, None, None), lane_sh(None, None, None, None, None),
                     lane_sh(None), rep, rep,
-                    NamedSharding(mesh, P(None, None, "model")), rep, rep,
+                    feat_sh, rep, rep,
                 ),
             ).lower(col_abs, mask_abs, rowid_abs, th_s, th_d, h_src, w_g, q)
             units = u_r
@@ -144,7 +162,7 @@ def main():
             )
             lowered = jax.jit(
                 lane_step,
-                in_shardings=(plan_sh, rep, rep, NamedSharding(mesh, P(None, None, "model")), rep, rep),
+                in_shardings=(plan_sh, rep, rep, feat_sh, rep, rep),
             ).lower(plan, th_s, th_d, h_src, w_g, q)
         compiled = lowered.compile()
     mem = compiled.memory_analysis()
@@ -154,6 +172,7 @@ def main():
     result = dict(
         status="ok",
         schedule=args.schedule,
+        executor=args.executor,
         mesh="pod2x16x16" if args.multi_pod else "pod16x16",
         lanes=lanes, units_per_lane=units, vertices=args.vertices, graphs=g,
         mem_per_device_gib=(mem.argument_size_in_bytes + mem.temp_size_in_bytes

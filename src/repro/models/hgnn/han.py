@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from ...core import stages
 from ...core.fusion import NABackend, neighbor_aggregate
+from ...dist.sharding import shard
 from .common import HGNNData, HGNNModel, glorot, split_keys
 
 
@@ -48,6 +49,7 @@ def _han_embed(params, data: HGNNData, backend: NABackend):
     x = data.features[data.target_type]
     heads = params["a_src"].shape[1]
     h = stages.feature_projection(x, params["w_fp"], params["b_fp"])
+    h = shard(h, "act_vertex", "act_feat")  # projected-once FP output (RAB)
     n = x.shape[0]
     hh = h.reshape(n, heads, -1)
 
@@ -57,11 +59,12 @@ def _han_embed(params, data: HGNNData, backend: NABackend):
         th_s, th_d = stages.attention_coefficients(hh, params["a_src"][i], params["a_dst"][i])
         z = neighbor_aggregate(batch, th_s, th_d, hh, backend=backend)  # [N, H, Dh]
         z = jax.nn.elu(z.reshape(n, -1))
+        z = shard(z, "act_vertex", "act_feat")
         w_p = stages.local_semantic_fusion(z, params["w_g"], params["b_g"], params["q"], valid_dst)
         z_list.append(z)
         w_list.append(w_p)
     fused, beta = stages.global_semantic_fusion(jnp.stack(w_list), jnp.stack(z_list))
-    return fused, beta
+    return shard(fused, "act_vertex", "act_feat"), beta
 
 
 def han_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGMENT):

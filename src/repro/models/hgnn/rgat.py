@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from ...core import stages
 from ...core.fusion import NABackend, neighbor_aggregate
+from ...dist.sharding import shard
 from .common import HGNNData, HGNNModel, glorot, split_keys
 
 
@@ -58,8 +59,10 @@ def rgat_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGME
         for i, batch in enumerate(data.graphs):
             rp = lp["rel"][f"g{i}"]
             # FP (relation-specific) fused with coefficient computation
-            hs = (h[batch.src_type] @ rp["w_src"]).reshape(batch.num_src, heads, -1)
-            hd = (h[batch.dst_type] @ rp["w_dst"]).reshape(batch.num_dst, heads, -1)
+            hs = shard(h[batch.src_type] @ rp["w_src"], "act_vertex", "act_feat")
+            hs = hs.reshape(batch.num_src, heads, -1)
+            hd = shard(h[batch.dst_type] @ rp["w_dst"], "act_vertex", "act_feat")
+            hd = hd.reshape(batch.num_dst, heads, -1)
             th_s, _ = stages.attention_coefficients(hs, rp["a_src"], rp["a_dst"])
             _, th_d = stages.attention_coefficients(hd, rp["a_src"], rp["a_dst"])
             z = neighbor_aggregate(batch, th_s, th_d, hs, backend=backend)
@@ -70,7 +73,7 @@ def rgat_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGME
                 s = jnp.mean(jnp.stack(agg[t]), axis=0)  # SF: mean over relations
             else:
                 s = h[t] @ lp["self"][t]
-            h_new[t] = jax.nn.elu(s)
+            h_new[t] = shard(jax.nn.elu(s), "act_vertex", "act_feat")
         h = h_new
     return h[data.target_type] @ params["w_out"] + params["b_out"]
 

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.fusion import NABackend, mean_aggregate
+from ...dist.sharding import shard
 from .common import HGNNData, HGNNModel, glorot, split_keys
 
 
@@ -47,7 +48,7 @@ def rgcn_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGME
         # FP (relation-specific) + NA (mean) per relation graph
         agg: dict[str, list[jnp.ndarray]] = {}
         for i, batch in enumerate(data.graphs):
-            hr = h[batch.src_type] @ lp["rel"][f"g{i}"]
+            hr = shard(h[batch.src_type] @ lp["rel"][f"g{i}"], "act_vertex", "act_feat")
             z = mean_aggregate(batch, hr)
             agg.setdefault(batch.dst_type, []).append(z)
         # SF: sum over relations + self transform
@@ -56,7 +57,7 @@ def rgcn_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGME
             s = h[t] @ lp["self"][t]
             for z in agg.get(t, []):
                 s = s + z
-            h_new[t] = jax.nn.relu(s)
+            h_new[t] = shard(jax.nn.relu(s), "act_vertex", "act_feat")
         h = h_new
     return h[data.target_type] @ params["w_out"] + params["b_out"]
 

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from ...core import stages
 from ...core.fusion import NABackend, neighbor_aggregate
+from ...dist.sharding import shard
 from .common import HGNNData, HGNNModel, glorot, split_keys
 
 
@@ -53,7 +54,10 @@ def init_shgn(
 def shgn_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGMENT):
     heads = params["layers"][0]["a_src"].shape[0]
     # FP: each vertex type projected exactly once
-    h = {t: data.features[t] @ params["fp"][t] for t in data.features}
+    h = {
+        t: shard(data.features[t] @ params["fp"][t], "act_vertex", "act_feat")
+        for t in data.features
+    }
     for lp in params["layers"]:
         agg: dict[str, list[jnp.ndarray]] = {}
         for i, batch in enumerate(data.graphs):
@@ -72,7 +76,7 @@ def shgn_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGME
         for t in h:
             if t in agg:
                 s = jnp.sum(jnp.stack(agg[t]), axis=0)
-                h_new[t] = jax.nn.elu(s) + h[t]  # residual
+                h_new[t] = shard(jax.nn.elu(s) + h[t], "act_vertex", "act_feat")  # residual
             else:
                 h_new[t] = h[t]
         h = h_new

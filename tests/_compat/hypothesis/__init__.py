@@ -1,0 +1,49 @@
+"""Minimal deterministic stand-in for the `hypothesis` API this suite uses.
+
+Only loaded (via tests/conftest.py) when the real package is missing.
+``@given`` runs the test body ``max_examples`` times with values drawn
+from a seeded PRNG — deterministic across runs, no shrinking, no
+database.  Supported surface: ``given``, ``settings``, ``strategies.
+{data,integers,sampled_from,booleans,floats,lists,tuples,just}``.
+"""
+from __future__ import annotations
+
+import random
+
+from . import strategies
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", None)
+            if n is None:
+                n = getattr(fn, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(n):
+                rnd = random.Random(0x5EED + 7919 * i)
+                drawn = [s.example(rnd) for s in strats]
+                fn(*args, *drawn, **kwargs)
+
+        # No functools.wraps: a __wrapped__ attribute would expose the
+        # original signature and make pytest treat the given-supplied
+        # parameters as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._max_examples = getattr(fn, "_max_examples", None)
+        return wrapper
+
+    return deco

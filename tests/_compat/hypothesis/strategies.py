@@ -1,0 +1,73 @@
+"""Strategy objects for the hypothesis stand-in (see package docstring)."""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Sequence
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn: Callable[[random.Random], Any]):
+        self._draw = draw_fn
+
+    def example(self, rnd: random.Random) -> Any:
+        return self._draw(rnd)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rnd: f(self._draw(rnd)))
+
+    def filter(self, pred: Callable[[Any], bool]) -> "SearchStrategy":
+        def draw(rnd: random.Random):
+            for _ in range(1000):
+                v = self._draw(rnd)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+
+        return SearchStrategy(draw)
+
+
+class _DataObject:
+    """Interactive draws: ``data.draw(strategy)`` inside the test body."""
+
+    def __init__(self, rnd: random.Random):
+        self._rnd = rnd
+
+    def draw(self, strategy: SearchStrategy, label: str | None = None):
+        return strategy.example(self._rnd)
+
+
+def data() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: _DataObject(rnd))
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def sampled_from(elements: Sequence) -> SearchStrategy:
+    xs = list(elements)
+    return SearchStrategy(lambda rnd: xs[rnd.randrange(len(xs))])
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: value)
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    def draw(rnd: random.Random):
+        n = rnd.randint(min_size, max_size)
+        return [elements.example(rnd) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strats: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rnd: tuple(s.example(rnd) for s in strats))

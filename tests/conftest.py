@@ -1,0 +1,15 @@
+"""Test bootstrap: gate optional third-party deps.
+
+The container this suite runs in does not always ship `hypothesis`; the
+property tests only use a tiny slice of it (``given``/``settings`` +
+integer/choice strategies), so a deterministic stand-in under
+``tests/_compat`` fills in when the real package is absent.  When
+hypothesis IS installed it wins — the stub directory is only added to
+``sys.path`` after a failed lookup.
+"""
+import importlib.util
+import os
+import sys
+
+if importlib.util.find_spec("hypothesis") is None:
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_compat"))
