@@ -194,6 +194,6 @@ def run(report):
             tot = t_fp + t_na + t_sf
             report(
                 f"breakdown/{ds}/{name}",
-                tot * 1e6,
+                tot,
                 f"FP={t_fp/tot:.0%} NA={t_na/tot:.0%} SF={t_sf/tot:.0%}",
             )

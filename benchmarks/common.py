@@ -7,7 +7,11 @@ import jax
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    """Median wall time in MICROSECONDS of fn(*args) with block_until_ready.
+
+    Returns µs so report rows (`us_per_call`) consume it directly —
+    callers must not rescale.
+    """
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
@@ -18,10 +22,12 @@ def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         jax.block_until_ready(out)
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return times[len(times) // 2] * 1e6
 
 
-def row(name: str, us_per_call: float, derived: str) -> str:
+def row(name: str, us_per_call: float, derived: str, backend: str | None = None) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
+    if backend is not None:
+        line += f",backend={backend}"
     print(line)
     return line

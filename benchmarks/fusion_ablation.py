@@ -97,8 +97,8 @@ def run(report):
         gain = 1.0 - t_fused / t_staged
         report(
             f"fusion/{ds}/HAN",
-            t_fused * 1e6,
-            f"staged_us={t_staged*1e6:.0f} fused_us={t_fused*1e6:.0f} reduction={gain:.0%}",
+            t_fused,
+            f"staged_us={t_staged:.0f} fused_us={t_fused:.0f} reduction={gain:.0%}",
         )
 
         # R-GAT single layer (the paper's biggest fusion winner)
@@ -113,6 +113,6 @@ def run(report):
         gain = 1.0 - t_fused / t_staged
         report(
             f"fusion/{ds}/R-GAT",
-            t_fused * 1e6,
-            f"staged_us={t_staged*1e6:.0f} fused_us={t_fused*1e6:.0f} reduction={gain:.0%}",
+            t_fused,
+            f"staged_us={t_staged:.0f} fused_us={t_fused:.0f} reduction={gain:.0%}",
         )

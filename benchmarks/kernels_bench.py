@@ -35,7 +35,7 @@ def run(report):
         t = timeit(fn, ths, thd, hs, iters=3)
         report(
             f"kernel/na/{backend.value}",
-            t * 1e6,
+            t,
             f"edges={sg.num_edges} heads={H} dh={Dh}",
         )
     # Pallas kernel body, interpret mode (correctness-path timing only)
@@ -43,7 +43,7 @@ def run(report):
         lambda a, b, c: neighbor_aggregate(batch, a, b, c, backend=NABackend.KERNEL_INTERPRET)
     )
     t = timeit(fn, ths, thd, hs, warmup=1, iters=1)
-    report("kernel/na/pallas_interpret", t * 1e6, "interpret-mode (not a TPU projection)")
+    report("kernel/na/pallas_interpret", t, "interpret-mode (not a TPU projection)")
 
     # flash attention: XLA chunked vs materialized, plus pallas interpret
     from repro.models.lm.attention import _sdpa_flash_xla, _sdpa_xla
@@ -61,8 +61,8 @@ def run(report):
     f_chk = jax.jit(lambda q_, k_, v_: _sdpa_flash_xla(q_, k_, v_, cfg, causal=True, window=None, q_chunk=256, k_chunk=256))
     t_mat = timeit(f_mat, q, k, v, iters=3)
     t_chk = timeit(f_chk, q, k, v, iters=3)
-    report("kernel/attn/materialized", t_mat * 1e6, f"S={S}")
-    report("kernel/attn/chunked_online", t_chk * 1e6, f"S={S} ratio={t_mat/t_chk:.2f}x")
+    report("kernel/attn/materialized", t_mat, f"S={S}")
+    report("kernel/attn/chunked_online", t_chk, f"S={S} ratio={t_mat/t_chk:.2f}x")
 
     # FP + coefficient fusion (paper Alg. 2 lines 7-8): one pass over x vs
     # separate projection + two coefficient contractions
@@ -89,6 +89,6 @@ def run(report):
 
     t_staged = timeit(staged_fp, x, iters=3)
     t_fused = timeit(fused_fp, x, warmup=1, iters=1)
-    report("kernel/fp_coeff/staged_xla", t_staged * 1e6, f"N={N} Din={Din}")
-    report("kernel/fp_coeff/fused_pallas_interpret", t_fused * 1e6,
+    report("kernel/fp_coeff/staged_xla", t_staged, f"N={N} Din={Din}")
+    report("kernel/fp_coeff/fused_pallas_interpret", t_fused,
            "interpret-mode (datapath validation, not a TPU projection)")

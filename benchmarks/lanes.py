@@ -45,6 +45,6 @@ def run(report):
             tag = "balanced" if balanced else "naive"
             report(
                 f"lanes/dblp/L{lanes}/{tag}",
-                t * 1e6,
+                t,
                 f"modeled_speedup={speedup:.2f} imbalance={plan.lane_plan.imbalance():.2f}",
             )

@@ -1,0 +1,97 @@
+"""Multilane NA executors — the first measured perf trajectory for the
+fused multigraph kernel (paper §4.1–4.2).
+
+Three executors over the SAME work (all semantic graphs of a HAN layer),
+swept over graph counts G ∈ {1, 3, 5}:
+
+* ``per_graph_loop``   — one jitted BLOCK-backend program per semantic
+  graph with a host barrier each (G dispatches): the staged
+  GPU-framework shape the paper speeds up.
+* ``vmap_reference``   — ``multilane_na`` reference backend: one dispatch,
+  vmap over (lanes, units) of the scan oracle.
+* ``kernel_interpret`` — ``multilane_na(backend="kernel_interpret")``:
+  one dispatch containing ONE fused Pallas launch for every unit of every
+  graph.  Interpret-mode timings validate the datapath and dispatch
+  structure on CPU; they are NOT TPU projections (the TPU story is
+  ``backend="kernel"`` on real hardware + §Roofline).
+
+Rows carry ``backend=`` so ``run.py --json`` can write the
+BENCH_multilane.json regression baseline (schema: name, us_per_call,
+backend, derived).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import NABackend, batch_semantic_graph, neighbor_aggregate
+from repro.core.multilane import build_multilane_plan, multilane_na
+from repro.graphs import build_semantic_graphs, synthetic_hetgraph
+
+from .common import timeit
+
+# author→author metapath pool over DBLP (Table 5 relations); prefixes give
+# the G sweep, all sharing the author dst/src space as multilane requires
+_POOL = [
+    ("author", "paper", "author"),
+    ("author", "paper", "term", "paper", "author"),
+    ("author", "paper", "venue", "paper", "author"),
+    ("author", "paper", "author", "paper", "author"),
+    ("author", "paper", "venue", "paper", "author", "paper", "author"),
+]
+
+B, H, DH, LANES = 16, 2, 8, 4
+
+
+def run(report):
+    g = synthetic_hetgraph("dblp", scale=0.12, feat_scale=0.1, seed=0)
+    rng = np.random.default_rng(0)
+    for g_count in (1, 3, 5):
+        sgs = build_semantic_graphs(g, _POOL[:g_count], max_edges=60_000)
+        batches = [batch_semantic_graph(s, block=B) for s in sgs]
+        gn = len(batches)
+        ns = batches[0].num_src
+        ns_pad = ((ns + B - 1) // B) * B
+        nd_pad = batches[0].num_dst_pad
+        edges = sum(bb.num_edges for bb in batches)
+        hs = jnp.asarray(
+            np.pad(rng.standard_normal((ns, H, DH)), ((0, ns_pad - ns), (0, 0), (0, 0))
+                   ).astype(np.float32))
+        ths = jnp.asarray(rng.standard_normal((gn, ns_pad, H)).astype(np.float32))
+        thd = jnp.asarray(rng.standard_normal((gn, nd_pad, H)).astype(np.float32))
+
+        # staged shape: one program per graph, host barrier after each
+        fns = [
+            jax.jit(lambda a, b_, c, bb=bb: neighbor_aggregate(
+                bb, a, b_, c, backend=NABackend.BLOCK))
+            for bb in batches
+        ]
+
+        def per_graph_loop():
+            outs = []
+            for i, fn in enumerate(fns):
+                bb = batches[i]
+                out = fn(ths[i, : bb.num_src], thd[i, : bb.num_dst], hs[: bb.num_src])
+                jax.block_until_ready(out)
+                outs.append(out)
+            return outs
+
+        t_loop = timeit(per_graph_loop, iters=3)
+        report(f"multilane/G{gn}/per_graph_loop", t_loop,
+               f"dispatches={gn} edges={edges}", backend="block")
+
+        plan = build_multilane_plan(batches, LANES)
+        ref_fn = jax.jit(lambda p: multilane_na(p, ths, thd, hs))
+        t_ref = timeit(ref_fn, plan, iters=3)
+        report(f"multilane/G{gn}/vmap_reference", t_ref,
+               f"dispatches=1 lanes={LANES} edges={edges} "
+               f"vs_loop={t_loop/max(t_ref,1e-9):.2f}x", backend="reference")
+
+        ker_fn = jax.jit(
+            lambda p: multilane_na(p, ths, thd, hs, backend="kernel_interpret"))
+        t_ker = timeit(ker_fn, plan, warmup=1, iters=1)
+        report(f"multilane/G{gn}/kernel_interpret", t_ker,
+               f"dispatches=1 fused_launches=1 edges={edges} "
+               f"interpret-mode (not a TPU projection)",
+               backend="kernel_interpret")

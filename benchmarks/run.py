@@ -1,17 +1,25 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived[,backend=...]`` CSV rows:
   breakdown/*        — Fig. 2  execution-time breakdown (FP/NA/SF)
   fusion/*           — Fig. 13 bound-aware stage fusion vs staged
   lanes/*            — Fig. 14 lane scaling + workload-aware scheduling
   similarity/*       — Fig. 15 similarity-aware scheduling (DRAM fetch)
   kernel/*           — kernel-level backends (fused online-softmax NA)
+  multilane/*        — fused multigraph kernel vs vmap reference vs
+                       per-graph loop across G semantic graphs
   roofline/*         — §Roofline terms per (arch × shape × mesh), from
                        the dry-run artifacts (run launch/dryrun first)
+
+``--json`` additionally writes the rows as ``BENCH_<only>.json`` (or
+``BENCH.json`` for a full run): a list of
+``{name, us_per_call, backend, derived}`` records — the regression
+baseline later PRs compare against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -21,9 +29,22 @@ from .common import row
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-list of bench names")
+    ap.add_argument(
+        "--json", action="store_true",
+        help="write rows to BENCH_<only>.json (BENCH.json for a full run)",
+    )
     args = ap.parse_args()
 
-    from . import breakdown, fusion_ablation, kernels_bench, lanes, roofline, similarity, stage_roofline
+    from . import (
+        breakdown,
+        fusion_ablation,
+        kernels_bench,
+        lanes,
+        multilane_bench,
+        roofline,
+        similarity,
+        stage_roofline,
+    )
 
     benches = {
         "breakdown": breakdown.run,
@@ -31,6 +52,7 @@ def main() -> None:
         "lanes": lanes.run,
         "similarity": similarity.run,
         "kernels": kernels_bench.run,
+        "multilane": multilane_bench.run,
         "stage_roofline": stage_roofline.run,
         "roofline": roofline.run,
     }
@@ -38,14 +60,28 @@ def main() -> None:
         keep = set(args.only.split(","))
         benches = {k: v for k, v in benches.items() if k in keep}
 
+    records: list[dict] = []
+
+    def report(name: str, us_per_call: float, derived: str, backend: str | None = None):
+        records.append(dict(
+            name=name, us_per_call=float(us_per_call), backend=backend, derived=derived,
+        ))
+        return row(name, us_per_call, derived, backend=backend)
+
     failures = 0
     for name, fn in benches.items():
         try:
-            fn(row)
+            fn(report)
         except Exception:
             failures += 1
             print(f"{name},0.0,ERROR", file=sys.stderr)
             traceback.print_exc()
+    if args.json:
+        tag = "_" + "_".join(sorted(benches)) if args.only else ""
+        path = f"BENCH{tag}.json"
+        with open(path, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"wrote {path} ({len(records)} rows)", file=sys.stderr)
     if failures:
         raise SystemExit(f"{failures} benches failed")
 

@@ -15,6 +15,8 @@ import numpy as np
 from repro.core import fp_buffer_traffic, similarity_schedule
 from repro.graphs import build_semantic_graphs, synthetic_hetgraph
 
+from .common import timeit
+
 HIDDEN_BYTES = 64 * 4  # projected feature row: hidden 64, fp32
 
 # metapath pool over IMDB types (paper sweeps synthetic metapath counts)
@@ -56,8 +58,15 @@ def run(report):
             ]
             rnd_fetch = np.mean([r.fetched_bytes for r in rnd])
             norm = sim.fetched_bytes / max(rnd_fetch, 1)
+            # wall time of one traffic-model evaluation (host-side)
+            t = timeit(
+                lambda: fp_buffer_traffic(
+                    order, sgs, g.vertex_counts, bytes_per_vertex=bpv, fpbuf_bytes=buf
+                ),
+                warmup=1, iters=3,
+            )
             report(
                 f"similarity/imdb/P{n_graphs}/ratio{ratio}",
-                0.0,
+                t,
                 f"normalized_dram_fetch={norm:.3f} reuse_frac={sim.reuse_fraction:.3f}",
             )

@@ -20,16 +20,33 @@ from repro.core import stages
 from repro.launch.hlostats import normalize_cost_analysis
 from repro.graphs import build_semantic_graph, synthetic_hetgraph, to_padded_edges
 
+from .common import timeit
+
 RIDGE_V5E = 197e12 / 819e9  # ≈ 240 FLOP/byte (bf16 MXU)
 RIDGE_T4 = 8.1e12 / 300e9    # ≈ 27 FLOP/byte (the paper's Fig. 3 ridge)
 
 
 def _ai(fn, *args):
+    """(flops, bytes, AI) from cost_analysis; bytes/AI are None when the
+    backend omits "bytes accessed" — a fabricated default would silently
+    misclassify the bound."""
     c = jax.jit(fn).lower(*args).compile()
     cost = normalize_cost_analysis(c.cost_analysis())
     fl = float(cost.get("flops", 0.0))
-    by = float(cost.get("bytes accessed", 1.0))
+    by = cost.get("bytes accessed")
+    if by is None:
+        return fl, None, None
+    by = float(by)
     return fl, by, fl / max(by, 1.0)
+
+
+def _derived(fl, ai):
+    if ai is None:
+        return f"AI=n/a (backend omitted bytes accessed) flops={fl:.3g}"
+    return (
+        f"AI={ai:.1f}FLOP/B T4bound={'compute' if ai > RIDGE_T4 else 'memory'} "
+        f"v5ebound={'compute' if ai > RIDGE_V5E else 'memory'} flops={fl:.3g}"
+    )
 
 
 def run(report):
@@ -50,22 +67,19 @@ def run(report):
     src, dst, valid = jnp.asarray(pe.src), jnp.asarray(pe.dst), jnp.asarray(pe.valid)
 
     # FP stage (dense GEMM — the paper's sgemm)
-    fl, by, ai = _ai(lambda x_: stages.feature_projection(x_, w, b), x)
-    report("stage_roofline/FP", 0.0,
-           f"AI={ai:.1f}FLOP/B T4bound={'compute' if ai > RIDGE_T4 else 'memory'} "
-           f"v5ebound={'compute' if ai > RIDGE_V5E else 'memory'} flops={fl:.3g}")
+    fp_fn = lambda x_: stages.feature_projection(x_, w, b)
+    fl, by, ai = _ai(fp_fn, x)
+    t = timeit(jax.jit(fp_fn), x, iters=3)
+    report("stage_roofline/FP", t, _derived(fl, ai))
     ai_fp = ai
 
     # NA stage (segment softmax aggregation — the paper's SpMMCsr)
-    fl, by, ai = _ai(
-        lambda t1, t2, h_: stages.segment_softmax_aggregate(
-            src, dst, valid, t1, t2, h_, sg.num_dst
-        ),
-        th_s, th_d, h,
+    na_fn = lambda t1, t2, h_: stages.segment_softmax_aggregate(
+        src, dst, valid, t1, t2, h_, sg.num_dst
     )
-    report("stage_roofline/NA", 0.0,
-           f"AI={ai:.1f}FLOP/B T4bound={'compute' if ai > RIDGE_T4 else 'memory'} "
-           f"v5ebound={'compute' if ai > RIDGE_V5E else 'memory'} flops={fl:.3g}")
+    fl, by, ai = _ai(na_fn, th_s, th_d, h)
+    t = timeit(jax.jit(na_fn), th_s, th_d, h, iters=3)
+    report("stage_roofline/NA", t, _derived(fl, ai))
     ai_na = ai
 
     # SF stage (semantic attention: gemm + elementwise + reduce)
@@ -83,8 +97,12 @@ def run(report):
         return fused
 
     fl, by, ai = _ai(sf, z)
-    report("stage_roofline/SF", 0.0,
-           f"AI={ai:.1f}FLOP/B T4bound={'compute' if ai > RIDGE_T4 else 'memory'} "
-           f"v5ebound={'compute' if ai > RIDGE_V5E else 'memory'} flops={fl:.3g}")
+    t = timeit(jax.jit(sf), z, iters=3)
+    report("stage_roofline/SF", t, _derived(fl, ai))
     # the paper's headline: FP's AI is orders of magnitude above NA's
-    report("stage_roofline/ratio", 0.0, f"AI_FP/AI_NA={ai_fp/max(ai_na,1e-9):.1f}x (paper: 26.8/0.49=55x)")
+    if ai_fp is None or ai_na is None:
+        report("stage_roofline/ratio", 0.0,
+               "AI_FP/AI_NA=n/a (backend omitted bytes accessed)")
+    else:
+        report("stage_roofline/ratio", 0.0,
+               f"AI_FP/AI_NA={ai_fp/max(ai_na,1e-9):.1f}x (paper: 26.8/0.49=55x)")

@@ -2,7 +2,15 @@
 execution (lane scheduling), similarity-aware execution scheduling, and
 RAB-style data-reuse accounting."""
 from . import stages
-from .fusion import NABackend, SemanticGraphBatch, batch_semantic_graph, mean_aggregate, neighbor_aggregate
+from .fusion import (
+    NABackend,
+    SemanticGraphBatch,
+    batch_semantic_graph,
+    build_unit_tables,
+    mean_aggregate,
+    neighbor_aggregate,
+    neighbor_aggregate_multi,
+)
 from .reuse import FPTraffic, ReuseCounters, count_reuse, fp_buffer_traffic
 from .scheduling import (
     LanePlan,
@@ -19,8 +27,10 @@ __all__ = [
     "NABackend",
     "SemanticGraphBatch",
     "batch_semantic_graph",
+    "build_unit_tables",
     "mean_aggregate",
     "neighbor_aggregate",
+    "neighbor_aggregate_multi",
     "FPTraffic",
     "ReuseCounters",
     "count_reuse",

@@ -37,6 +37,14 @@ class NABackend(enum.Enum):
     BLOCK = "block"
     KERNEL = "kernel"
     KERNEL_INTERPRET = "kernel_interpret"
+    # fused multigraph kernel (kernels/seg_gat_agg_multigraph): ALL semantic
+    # graphs of a layer in one Pallas launch — the paper's multi-lane
+    # datapath.  Differentiable (custom VJP with a fused backward launch).
+    MULTIGRAPH = "multigraph"
+    MULTIGRAPH_INTERPRET = "multigraph_interpret"
+
+
+_MULTIGRAPH_BACKENDS = (NABackend.MULTIGRAPH, NABackend.MULTIGRAPH_INTERPRET)
 
 
 @dataclasses.dataclass
@@ -140,6 +148,14 @@ def neighbor_aggregate(
     edge_bias: jnp.ndarray | float = 0.0,
 ) -> jnp.ndarray:
     """Attention NA with the chosen backend.  Returns [num_dst, H, Dh]."""
+    if backend in _MULTIGRAPH_BACKENDS:
+        bias = edge_bias
+        if not (hasattr(bias, "ndim") and bias.ndim == 2):
+            bias = jnp.broadcast_to(jnp.asarray(bias, jnp.float32), (1, theta_src.shape[-1]))
+        return neighbor_aggregate_multi(
+            [batch], theta_src[None], theta_dst[None], h_src,
+            backend=backend, leaky_slope=leaky_slope, edge_bias=bias,
+        )[0]
     if backend is NABackend.SEGMENT:
         assert batch.src is not None, "batch built without edge list"
         return stages.segment_softmax_aggregate(
@@ -167,6 +183,93 @@ def neighbor_aggregate(
             interpret=backend is NABackend.KERNEL_INTERPRET,
         )
     return out[: batch.num_dst]
+
+
+def build_unit_tables(batches: list[SemanticGraphBatch]):
+    """Stack the block-CSR rows of several semantic graphs into the flat
+    (col_index, graph_id, dst_row, masks) work-unit layout of
+    kernels/seg_gat_agg_multigraph: one unit per (graph, dst-block row),
+    col widths padded to the max across graphs.
+
+    Requires all graphs to share the dst vertex space and block size
+    (HAN's metapath graphs do).  Host-side; build once per layer.
+    """
+    assert batches, "no semantic graphs"
+    b = batches[0].block
+    n_rows = int(batches[0].col_index.shape[0])
+    for bb in batches:
+        assert bb.col_index is not None, "batch built without block CSR"
+        assert bb.block == b and int(bb.col_index.shape[0]) == n_rows
+
+    w_max = max(int(bb.col_index.shape[1]) for bb in batches)
+    g_n = len(batches)
+    col = np.full((g_n, n_rows, w_max), -1, np.int32)
+    masks = np.zeros((g_n, n_rows, w_max, b, b), bool)
+    for i, bb in enumerate(batches):
+        wg = int(bb.col_index.shape[1])
+        col[i, :, :wg] = np.asarray(bb.col_index)
+        masks[i, :, :wg] = np.asarray(bb.masks)
+    gid = np.repeat(np.arange(g_n, dtype=np.int32), n_rows)
+    row = np.tile(np.arange(n_rows, dtype=np.int32), g_n)
+    return (
+        jnp.asarray(col.reshape(g_n * n_rows, w_max)),
+        jnp.asarray(gid),
+        jnp.asarray(row),
+        jnp.asarray(masks.reshape(g_n * n_rows, w_max, b, b)),
+    )
+
+
+def neighbor_aggregate_multi(
+    batches: list[SemanticGraphBatch],
+    theta_src: jnp.ndarray,  # [G, Ns, H]
+    theta_dst: jnp.ndarray,  # [G, Nd, H]
+    h_src: jnp.ndarray,      # [Ns, H, Dh] (shared across graphs)
+    *,
+    backend: NABackend = NABackend.MULTIGRAPH_INTERPRET,
+    leaky_slope: float = 0.2,
+    edge_bias: jnp.ndarray | None = None,  # [G, H]
+    unit_tables: tuple | None = None,
+) -> jnp.ndarray:
+    """NA for ALL semantic graphs of a layer at once.  Returns
+    [G, num_dst, H, Dh].
+
+    With a MULTIGRAPH backend this is a single fused Pallas launch (one
+    forward and, under autodiff, one backward kernel for the whole layer);
+    any other backend falls back to a per-graph loop of
+    ``neighbor_aggregate`` — same semantics, G separate dispatches.
+    ``unit_tables`` (from :func:`build_unit_tables`) may be passed to skip
+    the host-side stacking inside jitted callers.
+    """
+    if backend not in _MULTIGRAPH_BACKENDS:
+        return jnp.stack([
+            neighbor_aggregate(
+                bb, theta_src[i], theta_dst[i], h_src[: bb.num_src],
+                backend=backend, leaky_slope=leaky_slope,
+                edge_bias=0.0 if edge_bias is None else edge_bias[i],
+            )
+            for i, bb in enumerate(batches)
+        ])
+
+    from ..kernels.seg_gat_agg_multigraph import seg_gat_agg_multigraph
+
+    b = batches[0].block
+    nd = batches[0].num_dst
+    nd_pad = batches[0].num_dst_pad
+    ns_pad = ((batches[0].num_src + b - 1) // b) * b
+    if unit_tables is None:
+        unit_tables = build_unit_tables(batches)
+    col, gid, row, masks = unit_tables
+
+    th_s = _pad_rows(theta_src.swapaxes(0, 1), ns_pad).swapaxes(0, 1)
+    th_d = _pad_rows(theta_dst.swapaxes(0, 1), nd_pad).swapaxes(0, 1)
+    hs = _pad_rows(h_src, ns_pad)
+    out = seg_gat_agg_multigraph(
+        col, gid, row, masks, th_s, th_d, hs, edge_bias,
+        leaky_slope=leaky_slope,
+        interpret=backend is NABackend.MULTIGRAPH_INTERPRET,
+    )  # [G*R*B, H, Dh] — units are g-major, rows in order
+    g_n = len(batches)
+    return out.reshape(g_n, nd_pad, *out.shape[1:])[:, :nd]
 
 
 def mean_aggregate(

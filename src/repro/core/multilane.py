@@ -168,13 +168,20 @@ def _unit_na(
         acc_new = acc * scale[:, :, None] + jnp.einsum("dsh,shf->dhf", p, hs)
         return (m_new, l_new, acc_new), None
 
+    # f32 carries regardless of input dtype — bf16 online-softmax state
+    # drifts badly over long W sweeps; the Pallas kernels accumulate in
+    # f32 too, so this keeps the reference and kernel paths comparable.
     init = (
-        jnp.full((b, h_dim), NEG_INF, h_src.dtype),
-        jnp.zeros((b, h_dim), h_src.dtype),
-        jnp.zeros((b, h_dim, dh), h_src.dtype),
+        jnp.full((b, h_dim), NEG_INF, jnp.float32),
+        jnp.zeros((b, h_dim), jnp.float32),
+        jnp.zeros((b, h_dim, dh), jnp.float32),
     )
     (m_f, l_f, acc_f), _ = jax.lax.scan(step, init, (cols, mrow))
-    return acc_f / jnp.maximum(l_f, 1e-9)[:, :, None]  # [B, H, Dh]
+    out = acc_f / jnp.maximum(l_f, 1e-9)[:, :, None]  # [B, H, Dh]
+    return out.astype(h_src.dtype)
+
+
+MULTILANE_BACKENDS = ("reference", "kernel", "kernel_interpret")
 
 
 def multilane_na(
@@ -185,27 +192,55 @@ def multilane_na(
     *,
     edge_bias: jnp.ndarray | None = None,  # [G, H]
     leaky_slope: float = 0.2,
+    backend: str = "reference",
 ) -> jnp.ndarray:
     """Run NA for all semantic graphs across lanes.
 
-    Returns z [G, Nd_pad, H, Dh].  vmap over (lanes, units); swap the
-    outer vmap for `shard_map` over a `lane` mesh axis for multi-chip
-    execution (launch/hgnn_dryrun does exactly that).
+    Returns z [G, Nd_pad, H, Dh].
+
+    ``backend`` selects the per-unit executor:
+      * ``"reference"`` — vmap over (lanes, units) of the scan oracle;
+      * ``"kernel"`` — one fused Pallas launch for *all* lanes' units
+        (kernels/seg_gat_agg_multigraph): the paper's mixed-graph lane
+        datapath as a single TPU kernel;
+      * ``"kernel_interpret"`` — same kernel under the Pallas interpreter
+        (CPU validation / CI).
+    All backends scatter identically, so they agree to f32 tolerance.
     """
+    if backend not in MULTILANE_BACKENDS:
+        raise ValueError(f"backend={backend!r}, expected one of {MULTILANE_BACKENDS}")
     g_n, _, h_dim = theta_src.shape
     dh = h_src.shape[-1]
     if edge_bias is None:
         edge_bias = jnp.zeros((g_n, h_dim), h_src.dtype)
 
-    unit_fn = lambda c, m, g, r: _unit_na(
-        c, m, g, r, theta_src, theta_dst, h_src, edge_bias, leaky_slope
-    )
-    per_lane = jax.vmap(jax.vmap(unit_fn))(
-        plan.col_index, plan.masks, plan.graph_id, plan.dst_row
-    )  # [L, U, B, H, Dh]
+    if backend == "reference":
+        unit_fn = lambda c, m, g, r: _unit_na(
+            c, m, g, r, theta_src, theta_dst, h_src, edge_bias, leaky_slope
+        )
+        per_unit = jax.vmap(jax.vmap(unit_fn))(
+            plan.col_index, plan.masks, plan.graph_id, plan.dst_row
+        )  # [L, U, B, H, Dh]
+    else:
+        from repro.kernels.seg_gat_agg_multigraph import seg_gat_agg_multigraph
+
+        lanes, units, w = plan.col_index.shape
+        flat = seg_gat_agg_multigraph(
+            plan.col_index.reshape(lanes * units, w),
+            plan.graph_id.reshape(lanes * units),
+            plan.dst_row.reshape(lanes * units),
+            plan.masks.reshape(lanes * units, w, plan.block, plan.block),
+            theta_src,
+            theta_dst,
+            h_src,
+            edge_bias,
+            leaky_slope=leaky_slope,
+            interpret=(backend == "kernel_interpret"),
+        )  # [L*U*B, H, Dh]
+        per_unit = flat.reshape(lanes, units, plan.block, h_dim, dh)
 
     out = jnp.zeros((g_n, plan.n_dst_blocks, plan.block, h_dim, dh), h_src.dtype)
-    contrib = jnp.where(plan.valid[:, :, None, None, None], per_lane, 0.0)
+    contrib = jnp.where(plan.valid[:, :, None, None, None], per_unit, 0.0)
     out = out.at[plan.graph_id, plan.dst_row].add(contrib)
     return out.reshape(g_n, plan.n_dst_blocks * plan.block, h_dim, dh)
 
@@ -220,6 +255,7 @@ def multilane_na_sharded(
     lane_axes: tuple[str, ...] = ("lane",),
     edge_bias: jnp.ndarray | None = None,  # [G, H]
     leaky_slope: float = 0.2,
+    backend: str = "reference",
 ) -> jnp.ndarray:
     """``multilane_na`` with the lane dimension dispatched over mesh chips.
 
@@ -256,8 +292,11 @@ def multilane_na_sharded(
     rep = PartitionSpec()
 
     def local(plan_loc, ths, thd, hs, bias):
+        # backend applies per shard: "kernel" = one fused Pallas launch
+        # per chip over that chip's lanes, shard_map across chips.
         partial = multilane_na(
-            plan_loc, ths, thd, hs, edge_bias=bias, leaky_slope=leaky_slope
+            plan_loc, ths, thd, hs, edge_bias=bias, leaky_slope=leaky_slope,
+            backend=backend,
         )
         return jax.lax.psum(partial, lane_axes)
 

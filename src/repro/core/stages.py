@@ -134,16 +134,18 @@ def block_softmax_aggregate(
             acc_new = acc * scale[:, :, None] + jnp.einsum("dsh,shf->dhf", p, hs)
             return (m_new, l_new, acc_new), None
 
+        # f32 carries regardless of input dtype — matches the Pallas
+        # kernels' f32 accumulation; only the final output is cast back.
         init = (
-            jnp.full((B, H), NEG_INF, h_src.dtype),
-            jnp.zeros((B, H), h_src.dtype),
-            jnp.zeros((B, H, Dh), h_src.dtype),
+            jnp.full((B, H), NEG_INF, jnp.float32),
+            jnp.zeros((B, H), jnp.float32),
+            jnp.zeros((B, H, Dh), jnp.float32),
         )
         (m_f, l_f, acc_f), _ = jax.lax.scan(step, init, (cols, mrow))
         return acc_f / jnp.maximum(l_f, 1e-9)[:, :, None]
 
     out = jax.vmap(row)(th_d, (col_index, masks))  # [R, B, H, Dh]
-    return out.reshape(R * B, H, Dh)
+    return out.reshape(R * B, H, Dh).astype(h_src.dtype)
 
 
 def local_semantic_fusion(

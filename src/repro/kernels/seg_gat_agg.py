@@ -93,9 +93,7 @@ def _kernel(
         out_ref[:, 0, :] = (acc_ref[...] / denom[:, None]).astype(out_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("leaky_slope", "interpret", "block_override")
-)
+@functools.partial(jax.jit, static_argnames=("leaky_slope", "interpret"))
 def seg_gat_agg(
     col_index: jnp.ndarray,  # int32 [R, W]
     masks: jnp.ndarray,      # bool  [R, W, B, B]
@@ -106,7 +104,6 @@ def seg_gat_agg(
     leaky_slope: float = 0.2,
     edge_bias: jnp.ndarray | float = 0.0,
     interpret: bool = False,
-    block_override: int | None = None,
 ) -> jnp.ndarray:
     """Returns the attention-aggregated features [Nd_pad, H, Dh].
 
@@ -119,7 +116,6 @@ def seg_gat_agg(
     Dh = h_src.shape[-1]
     assert theta_dst.shape == (R * B, H)
     assert h_src.shape == (ns_pad, H, Dh)
-    del block_override
 
     bias = jnp.broadcast_to(jnp.asarray(edge_bias, jnp.float32), (H,))
 

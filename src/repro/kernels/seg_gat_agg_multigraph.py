@@ -1,5 +1,5 @@
 """Multi-graph fused NA kernel — the paper's multi-lane execution (§4.2)
-at the Pallas level.
+at the Pallas level, forward AND backward.
 
 One kernel launch processes work units from *different* semantic graphs:
 each unit is a (graph, dst-block-row) pair, exactly the work unit of
@@ -10,7 +10,26 @@ stream in without any host-side regrouping: the hardware analogue of the
 Local Scheduler dispatching mixed-graph workloads onto one lane.
 
 Grid: (H, U, W) — U work units, W block slots per unit; scratch
-(m, l, acc) carries across W (online softmax, Fig. 6).
+(m, l, acc) carries across W (online softmax, Fig. 6).  The forward
+additionally emits the per-row log-sum-exp (lse = m + log l), the only
+residual the backward needs beyond the inputs.
+
+The backward is itself one fused multigraph launch (the
+kernel-consolidation result of arXiv 2408.08490 applied to training):
+it *recomputes* the attention probabilities online from lse
+(p = exp(logits - lse), flash-attention style — no [U, W, B, B, H]
+probability tensor is ever materialized) and produces
+
+  * d_theta_dst  — accumulated across the W axis in VMEM scratch,
+    written once per (unit, head);
+  * per-(unit, slot) d_theta_src / d_h_src block partials — the GSF-like
+    scatter-add onto the shared src vertex space happens outside the
+    kernel with segment sums (Pallas TPU cannot safely revisit output
+    blocks in non-consecutive grid steps).
+
+``seg_gat_agg_multigraph`` carries a ``jax.custom_vjp``, so HAN training
+consolidates all relations of a step into a single forward and a single
+backward launch.
 """
 from __future__ import annotations
 
@@ -18,6 +37,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -26,7 +46,7 @@ from .compat import CompilerParams
 NEG_INF = -1e30
 
 
-def _kernel(
+def _fwd_kernel(
     # scalar prefetch
     col_ref,    # int32 [U, W]
     gid_ref,    # int32 [U]
@@ -37,8 +57,9 @@ def _kernel(
     thd_ref,    # f32  [1, B, 1]   (graph-indexed dst coefficients)
     ths_ref,    # f32  [1, B, 1]   (graph-indexed src coefficients)
     hs_ref,     # f32  [B, 1, Dh]  (shared source features)
-    # output
+    # outputs
     out_ref,    # [B, 1, Dh]
+    lse_ref,    # f32 [B, 1]
     # scratch
     acc_ref, m_ref, l_ref,
     *,
@@ -57,8 +78,8 @@ def _kernel(
 
     col = col_ref[u, w]
     live = jnp.logical_and(mask_ref[0, 0], col >= 0)
-    thd = thd_ref[0, :, 0]
-    ths = ths_ref[0, :, 0]
+    thd = thd_ref[0, :, 0].astype(jnp.float32)
+    ths = ths_ref[0, :, 0].astype(jnp.float32)
     logits = thd[:, None] + ths[None, :] + bias_ref[gid_ref[u], h]
     logits = jnp.where(logits >= 0, logits, leaky_slope * logits)
     logits = jnp.where(live, logits, NEG_INF)
@@ -75,9 +96,265 @@ def _kernel(
 
     @pl.when(w == nw - 1)
     def _finalize():
+        l_fin = l_ref[...]
         out_ref[:, 0, :] = (
-            acc_ref[...] / jnp.maximum(l_ref[...], 1e-9)[:, None]
+            acc_ref[...] / jnp.maximum(l_fin, 1e-9)[:, None]
         ).astype(out_ref.dtype)
+        # lse of a fully-masked row degenerates to ~NEG_INF; the backward
+        # masks those positions with `live` before any use.
+        lse_ref[:, 0] = m_ref[...] + jnp.log(jnp.maximum(l_fin, 1e-30))
+
+
+def _bwd_kernel(
+    # scalar prefetch
+    col_ref,    # int32 [U, W]
+    gid_ref,    # int32 [U]
+    row_ref,    # int32 [U]
+    bias_ref,   # f32   [G, H]
+    # inputs
+    mask_ref,   # bool [1, 1, B, B]
+    thd_ref,    # [1, B, 1]
+    ths_ref,    # [1, B, 1]
+    hs_ref,     # [B, 1, Dh]
+    gout_ref,   # [B, 1, Dh]  cotangent of the per-unit output
+    lse_ref,    # f32 [B, 1]  forward log-sum-exp residual
+    delta_ref,  # f32 [B, 1]  sum_f g_out * out (flash-attention delta)
+    # outputs
+    dths_ref,   # f32 [1, 1, B, 1]      per-(unit, slot) src-coeff partial
+    dhs_ref,    # f32 [1, 1, B, 1, Dh]  per-(unit, slot) src-feature partial
+    dthd_ref,   # f32 [B, 1]            per-unit dst-coeff gradient
+    # scratch
+    dthd_acc_ref,  # f32 [B]
+    *,
+    leaky_slope: float,
+):
+    h = pl.program_id(0)
+    u = pl.program_id(1)
+    w = pl.program_id(2)
+    nw = pl.num_programs(2)
+
+    @pl.when(w == 0)
+    def _init():
+        dthd_acc_ref[...] = jnp.zeros_like(dthd_acc_ref)
+
+    col = col_ref[u, w]
+    live = jnp.logical_and(mask_ref[0, 0], col >= 0)  # [B(dst), B(src)]
+    thd = thd_ref[0, :, 0].astype(jnp.float32)
+    ths = ths_ref[0, :, 0].astype(jnp.float32)
+    pre = thd[:, None] + ths[None, :] + bias_ref[gid_ref[u], h]
+    logits = jnp.where(pre >= 0, pre, leaky_slope * pre)  # LeakyReLU
+    # recompute-p: attention probabilities from the lse residual
+    p = jnp.where(live, jnp.exp(logits - lse_ref[:, 0][:, None]), 0.0)
+
+    g_out = gout_ref[:, 0, :].astype(jnp.float32)  # [B, Dh]
+    hs = hs_ref[:, 0, :].astype(jnp.float32)       # [B, Dh]
+    dp = jnp.dot(g_out, hs.T, preferred_element_type=jnp.float32)  # [Bd, Bs]
+    dlogit = p * (dp - delta_ref[:, 0][:, None])   # softmax backward
+    dpre = jnp.where(pre >= 0, dlogit, leaky_slope * dlogit)
+
+    dths_ref[0, 0, :, 0] = jnp.sum(dpre, axis=0)
+    dhs_ref[0, 0, :, 0, :] = jnp.dot(p.T, g_out, preferred_element_type=jnp.float32)
+    dthd_acc_ref[...] += jnp.sum(dpre, axis=1)
+
+    @pl.when(w == nw - 1)
+    def _finalize():
+        dthd_ref[:, 0] = dthd_acc_ref[...]
+
+
+def _common_maps():
+    def mask_map(h, u, w, col, gid, row, bias):
+        return (u, w, 0, 0)
+
+    def thd_map(h, u, w, col, gid, row, bias):
+        return (gid[u], row[u], h)
+
+    def ths_map(h, u, w, col, gid, row, bias):
+        return (gid[u], jnp.maximum(col[u, w], 0), h)
+
+    def hs_map(h, u, w, col, gid, row, bias):
+        return (jnp.maximum(col[u, w], 0), h, 0)
+
+    return mask_map, thd_map, ths_map, hs_map
+
+
+def _fwd_call(col_index, graph_id, dst_row, masks, theta_src, theta_dst,
+              h_src, edge_bias, leaky_slope, interpret):
+    U, W = col_index.shape
+    B = masks.shape[-1]
+    G, ns_pad, H = theta_src.shape
+    Dh = h_src.shape[-1]
+    mask_map, thd_map, ths_map, hs_map = _common_maps()
+
+    def out_map(h, u, w, col, gid, row, bias):
+        return (u, h, 0)
+
+    def lse_map(h, u, w, col, gid, row, bias):
+        return (u, h)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(H, U, W),
+        in_specs=[
+            pl.BlockSpec((1, 1, B, B), mask_map),
+            pl.BlockSpec((1, B, 1), thd_map),
+            pl.BlockSpec((1, B, 1), ths_map),
+            pl.BlockSpec((B, 1, Dh), hs_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((B, 1, Dh), out_map),
+            pl.BlockSpec((B, 1), lse_map),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((B, Dh), jnp.float32),
+            pltpu.VMEM((B,), jnp.float32),
+            pltpu.VMEM((B,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, leaky_slope=leaky_slope),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((U * B, H, Dh), h_src.dtype),
+            jax.ShapeDtypeStruct((U * B, H), jnp.float32),
+        ),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="seg_gat_agg_multigraph",
+    )(col_index, graph_id, dst_row, edge_bias, masks, theta_dst, theta_src, h_src)
+
+
+def _bwd_call(col_index, graph_id, dst_row, masks, theta_src, theta_dst,
+              h_src, edge_bias, g_out, lse, delta, leaky_slope, interpret):
+    U, W = col_index.shape
+    B = masks.shape[-1]
+    G, ns_pad, H = theta_src.shape
+    Dh = h_src.shape[-1]
+    mask_map, thd_map, ths_map, hs_map = _common_maps()
+
+    def gout_map(h, u, w, col, gid, row, bias):
+        return (u, h, 0)
+
+    def unit_vec_map(h, u, w, col, gid, row, bias):
+        return (u, h)
+
+    def dths_map(h, u, w, col, gid, row, bias):
+        return (u, w, 0, h)
+
+    def dhs_map(h, u, w, col, gid, row, bias):
+        return (u, w, 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(H, U, W),
+        in_specs=[
+            pl.BlockSpec((1, 1, B, B), mask_map),
+            pl.BlockSpec((1, B, 1), thd_map),
+            pl.BlockSpec((1, B, 1), ths_map),
+            pl.BlockSpec((B, 1, Dh), hs_map),
+            pl.BlockSpec((B, 1, Dh), gout_map),
+            pl.BlockSpec((B, 1), unit_vec_map),
+            pl.BlockSpec((B, 1), unit_vec_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, B, 1), dths_map),
+            pl.BlockSpec((1, 1, B, 1, Dh), dhs_map),
+            pl.BlockSpec((B, 1), unit_vec_map),
+        ],
+        scratch_shapes=[pltpu.VMEM((B,), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, leaky_slope=leaky_slope),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((U, W, B, H), jnp.float32),
+            jax.ShapeDtypeStruct((U, W, B, H, Dh), jnp.float32),
+            jax.ShapeDtypeStruct((U * B, H), jnp.float32),
+        ),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="seg_gat_agg_multigraph_bwd",
+    )(col_index, graph_id, dst_row, edge_bias, masks, theta_dst, theta_src,
+      h_src, g_out, lse, delta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(8, 9))
+def _multigraph(col_index, graph_id, dst_row, masks, theta_src, theta_dst,
+                h_src, edge_bias, leaky_slope, interpret):
+    out, _ = _fwd_call(col_index, graph_id, dst_row, masks, theta_src,
+                       theta_dst, h_src, edge_bias, leaky_slope, interpret)
+    return out
+
+
+def _multigraph_fwd(col_index, graph_id, dst_row, masks, theta_src, theta_dst,
+                    h_src, edge_bias, leaky_slope, interpret):
+    out, lse = _fwd_call(col_index, graph_id, dst_row, masks, theta_src,
+                         theta_dst, h_src, edge_bias, leaky_slope, interpret)
+    res = (col_index, graph_id, dst_row, masks, theta_src, theta_dst, h_src,
+           edge_bias, out, lse)
+    return out, res
+
+
+def _multigraph_bwd(leaky_slope, interpret, res, g):
+    (col_index, graph_id, dst_row, masks, theta_src, theta_dst, h_src,
+     edge_bias, out, lse) = res
+    U, W = col_index.shape
+    B = masks.shape[-1]
+    G, ns_pad, H = theta_src.shape
+    Dh = h_src.shape[-1]
+    nblk = ns_pad // B
+    rd = theta_dst.shape[1] // B
+
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    dths_blk, dhs_blk, dthd_units = _bwd_call(
+        col_index, graph_id, dst_row, masks, theta_src, theta_dst, h_src,
+        edge_bias, g, lse, delta, leaky_slope, interpret,
+    )
+
+    # GSF-like scatter of the per-(unit, slot) partials onto the shared
+    # src vertex space.  Padding slots (col < 0) carry exact zeros (p=0),
+    # but mask them anyway so their block-0 landing spot stays clean.
+    flat_col = col_index.reshape(U * W)
+    live_blk = flat_col >= 0
+    col_safe = jnp.maximum(flat_col, 0)
+    gid_blk = jnp.repeat(graph_id, W)
+
+    dths_blk = jnp.where(live_blk[:, None, None], dths_blk.reshape(U * W, B, H), 0.0)
+    d_theta_src = jax.ops.segment_sum(
+        dths_blk, gid_blk * nblk + col_safe, num_segments=G * nblk
+    ).reshape(G, ns_pad, H)
+
+    dhs_blk = jnp.where(
+        live_blk[:, None, None, None], dhs_blk.reshape(U * W, B, H, Dh), 0.0
+    )
+    d_h_src = jax.ops.segment_sum(
+        dhs_blk, col_safe, num_segments=nblk
+    ).reshape(ns_pad, H, Dh)
+
+    d_theta_dst = (
+        jnp.zeros((G, rd, B, H), jnp.float32)
+        .at[graph_id, dst_row]
+        .add(dthd_units.reshape(U, B, H))
+        .reshape(G, rd * B, H)
+    )
+    # bias enters every logit additively: its gradient is the total dpre
+    # mass per graph, already summed over dst inside dths_blk.
+    d_bias = jax.ops.segment_sum(dths_blk.sum(axis=1), gid_blk, num_segments=G)
+
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)
+    return (
+        f0(col_index), f0(graph_id), f0(dst_row), f0(masks),
+        d_theta_src.astype(theta_src.dtype),
+        d_theta_dst.astype(theta_dst.dtype),
+        d_h_src.astype(h_src.dtype),
+        d_bias.astype(edge_bias.dtype),
+    )
+
+
+_multigraph.defvjp(_multigraph_fwd, _multigraph_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("leaky_slope", "interpret"))
@@ -95,57 +372,13 @@ def seg_gat_agg_multigraph(
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Returns per-unit aggregates [U*B, H, Dh] (caller scatters by
-    (graph_id, dst_row) — disjoint by construction)."""
-    U, W = col_index.shape
-    B = masks.shape[-1]
-    G, ns_pad, H = theta_src.shape
-    Dh = h_src.shape[-1]
+    (graph_id, dst_row) — disjoint by construction).  Differentiable wrt
+    theta_src / theta_dst / h_src / edge_bias via a fused Pallas backward."""
+    G, _, H = theta_src.shape
     if edge_bias is None:
         edge_bias = jnp.zeros((G, H), jnp.float32)
-
-    grid = (H, U, W)
-
-    def mask_map(h, u, w, col, gid, row, bias):
-        return (u, w, 0, 0)
-
-    def thd_map(h, u, w, col, gid, row, bias):
-        return (gid[u], row[u], h)
-
-    def ths_map(h, u, w, col, gid, row, bias):
-        return (gid[u], jnp.maximum(col[u, w], 0), h)
-
-    def hs_map(h, u, w, col, gid, row, bias):
-        return (jnp.maximum(col[u, w], 0), h, 0)
-
-    def out_map(h, u, w, col, gid, row, bias):
-        return (u, h, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, B, B), mask_map),
-            pl.BlockSpec((1, B, 1), thd_map),
-            pl.BlockSpec((1, B, 1), ths_map),
-            pl.BlockSpec((B, 1, Dh), hs_map),
-        ],
-        out_specs=pl.BlockSpec((B, 1, Dh), out_map),
-        scratch_shapes=[
-            pltpu.VMEM((B, Dh), jnp.float32),
-            pltpu.VMEM((B,), jnp.float32),
-            pltpu.VMEM((B,), jnp.float32),
-        ],
+    edge_bias = jnp.asarray(edge_bias, jnp.float32)
+    return _multigraph(
+        col_index, graph_id, dst_row, masks, theta_src, theta_dst, h_src,
+        edge_bias, float(leaky_slope), bool(interpret),
     )
-    # theta tables are [G, N, H] with block (1, B, 1): graph-indexed rows
-    thd_blocked = theta_dst
-    ths_blocked = theta_src
-    return pl.pallas_call(
-        functools.partial(_kernel, leaky_slope=leaky_slope),
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((U * B, H, Dh), h_src.dtype),
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
-        ),
-        interpret=interpret,
-        name="seg_gat_agg_multigraph",
-    )(col_index, graph_id, dst_row, edge_bias, masks, thd_blocked, ths_blocked, h_src)

@@ -92,10 +92,19 @@ def main():
         help="balanced schedule only: partitioner-placed (jit in_shardings) "
         "or explicit shard_map over the lane axis",
     )
+    ap.add_argument(
+        "--na-backend", choices=("reference", "kernel", "kernel_interpret"),
+        default="reference",
+        help="balanced schedule only: per-unit NA executor for multilane_na "
+        "('kernel' = one fused Pallas launch per chip; needs TPU lowering, "
+        "'kernel_interpret' validates the same kernel on CPU)",
+    )
     ap.add_argument("--out", default="artifacts/dryrun/hgnn_multilane.json")
     args = ap.parse_args()
     if args.schedule == "aligned" and args.executor != "spmd":
         ap.error("--executor shard_map only applies to --schedule balanced")
+    if args.schedule == "aligned" and args.na_backend != "reference":
+        ap.error("--na-backend only applies to --schedule balanced")
 
     block = 128
     rows = args.vertices // block
@@ -118,9 +127,10 @@ def main():
 
     def lane_step(plan, th_s, th_d, h_src, w_g, q):
         na = (
-            (lambda p, a, b, c: multilane_na_sharded(p, a, b, c, mesh=mesh, lane_axes=lane_axis))
+            (lambda p, a, b, c: multilane_na_sharded(
+                p, a, b, c, mesh=mesh, lane_axes=lane_axis, backend=args.na_backend))
             if args.executor == "shard_map"
-            else multilane_na
+            else (lambda p, a, b, c: multilane_na(p, a, b, c, backend=args.na_backend))
         )
         z = na(plan, th_s, th_d, h_src.astype(jnp.float32))  # [G, N, H, Dh]
         zf = z.reshape(g, ns_pad, h_dim * dh)

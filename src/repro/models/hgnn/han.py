@@ -14,7 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from ...core import stages
-from ...core.fusion import NABackend, neighbor_aggregate
+from ...core.fusion import (
+    _MULTIGRAPH_BACKENDS,
+    NABackend,
+    neighbor_aggregate,
+    neighbor_aggregate_multi,
+)
 from ...dist.sharding import shard
 from .common import HGNNData, HGNNModel, glorot, split_keys
 
@@ -55,14 +60,31 @@ def _han_embed(params, data: HGNNData, backend: NABackend):
 
     z_list, w_list = [], []
     valid_dst = jnp.ones((n,), bool)
-    for i, batch in enumerate(data.graphs):
-        th_s, th_d = stages.attention_coefficients(hh, params["a_src"][i], params["a_dst"][i])
-        z = neighbor_aggregate(batch, th_s, th_d, hh, backend=backend)  # [N, H, Dh]
-        z = jax.nn.elu(z.reshape(n, -1))
-        z = shard(z, "act_vertex", "act_feat")
-        w_p = stages.local_semantic_fusion(z, params["w_g"], params["b_g"], params["q"], valid_dst)
-        z_list.append(z)
-        w_list.append(w_p)
+    if backend in _MULTIGRAPH_BACKENDS:
+        # Consolidated path: all relations' theta in one einsum, all
+        # relations' NA in ONE fused multigraph launch (fwd and bwd).
+        th_s = jnp.einsum("nhd,ghd->gnh", hh, params["a_src"])
+        th_d = jnp.einsum("nhd,ghd->gnh", hh, params["a_dst"])
+        z_all = neighbor_aggregate_multi(
+            data.graphs, th_s, th_d, hh, backend=backend
+        )  # [G, N, H, Dh]
+        for i in range(len(data.graphs)):
+            z = jax.nn.elu(z_all[i].reshape(n, -1))
+            z = shard(z, "act_vertex", "act_feat")
+            w_p = stages.local_semantic_fusion(
+                z, params["w_g"], params["b_g"], params["q"], valid_dst
+            )
+            z_list.append(z)
+            w_list.append(w_p)
+    else:
+        for i, batch in enumerate(data.graphs):
+            th_s, th_d = stages.attention_coefficients(hh, params["a_src"][i], params["a_dst"][i])
+            z = neighbor_aggregate(batch, th_s, th_d, hh, backend=backend)  # [N, H, Dh]
+            z = jax.nn.elu(z.reshape(n, -1))
+            z = shard(z, "act_vertex", "act_feat")
+            w_p = stages.local_semantic_fusion(z, params["w_g"], params["b_g"], params["q"], valid_dst)
+            z_list.append(z)
+            w_list.append(w_p)
     fused, beta = stages.global_semantic_fusion(jnp.stack(w_list), jnp.stack(z_list))
     return shard(fused, "act_vertex", "act_feat"), beta
 

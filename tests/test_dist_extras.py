@@ -153,3 +153,6 @@ def test_multilane_na_sharded_matches_vmap_path():
     # as a pytree argument (regression for the MultiLanePlan aux contract)
     out2 = jax.jit(lambda p: multilane_na_sharded(p, ths, thd, hs, mesh=mesh))(plan)
     np.testing.assert_allclose(np.asarray(out2), np.asarray(ref), rtol=1e-6, atol=1e-6)
+    # fused-kernel backend through shard_map (one Pallas launch per shard)
+    out3 = multilane_na_sharded(plan, ths, thd, hs, mesh=mesh, backend="kernel_interpret")
+    np.testing.assert_allclose(np.asarray(out3), np.asarray(ref), rtol=1e-5, atol=1e-5)

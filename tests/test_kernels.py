@@ -120,6 +120,125 @@ def test_flash_attention_property(data):
     np.testing.assert_allclose(np.asarray(o), 1.0, rtol=1e-5)
 
 
+def _multigraph_case(seed=7, B=8, U=4, W=3, G=3, H=2, Dh=8, nblk=4, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    ns_pad = nblk * B
+    col = np.full((U, W), -1, np.int32)
+    for u in range(U):
+        k = rng.integers(1, W + 1)
+        col[u, :k] = rng.choice(nblk, size=k, replace=False)
+    gid = rng.integers(0, G, U).astype(np.int32)
+    row = rng.integers(0, nblk, U).astype(np.int32)
+    masks = rng.random((U, W, B, B)) < 0.3
+    ths = rng.standard_normal((G, ns_pad, H)).astype(dtype)
+    thd = rng.standard_normal((G, ns_pad, H)).astype(dtype)
+    hs = rng.standard_normal((ns_pad, H, Dh)).astype(dtype)
+    bias = rng.standard_normal((G, H)).astype(np.float32)
+    return col, gid, row, masks, ths, thd, hs, bias
+
+
+def test_seg_gat_agg_multigraph_invalid_units_are_exact_zeros():
+    from repro.kernels import seg_gat_agg_multigraph
+
+    col, gid, row, masks, ths, thd, hs, bias = _multigraph_case()
+    col[1] = -1   # unit 1: every slot padded
+    col[3] = -1
+    out = seg_gat_agg_multigraph(
+        jnp.asarray(col), jnp.asarray(gid), jnp.asarray(row), jnp.asarray(masks),
+        jnp.asarray(ths), jnp.asarray(thd), jnp.asarray(hs), jnp.asarray(bias),
+        interpret=True,
+    )
+    B = masks.shape[-1]
+    out = np.asarray(out)
+    assert np.abs(out[1 * B : 2 * B]).max() == 0.0
+    assert np.abs(out[3 * B : 4 * B]).max() == 0.0
+    assert np.abs(out[0:B]).max() > 0.0  # live units untouched
+
+
+def test_seg_gat_agg_multigraph_bf16_matches_f32_oracle():
+    from repro.core.multilane import _unit_na
+    from repro.kernels import seg_gat_agg_multigraph
+
+    col, gid, row, masks, ths, thd, hs, bias = _multigraph_case(seed=11)
+    B = masks.shape[-1]
+    out = seg_gat_agg_multigraph(
+        jnp.asarray(col), jnp.asarray(gid), jnp.asarray(row), jnp.asarray(masks),
+        jnp.asarray(ths), jnp.asarray(thd), jnp.asarray(hs, jnp.bfloat16),
+        jnp.asarray(bias), interpret=True,
+    )
+    assert out.dtype == jnp.bfloat16
+    for u in range(col.shape[0]):
+        ref = _unit_na(
+            jnp.asarray(col[u]), jnp.asarray(masks[u]), jnp.int32(gid[u]),
+            jnp.int32(row[u]), jnp.asarray(ths), jnp.asarray(thd), jnp.asarray(hs),
+            jnp.asarray(bias), 0.2,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out[u * B : (u + 1) * B], np.float32), np.asarray(ref),
+            **TOL[jnp.bfloat16],
+        )
+
+
+def test_seg_gat_agg_multigraph_g1_reduces_to_seg_gat_agg():
+    """G=1 with one unit per dst row in order IS the single-graph kernel."""
+    from repro.kernels import seg_gat_agg_multigraph
+
+    rng = np.random.default_rng(5)
+    B, R, W, H, Dh, nblk = 8, 3, 2, 2, 8, 4
+    ns = nblk * B
+    col = _unique_cols(rng, R, W, nblk)
+    masks = rng.random((R, W, B, B)) < 0.4
+    ths = rng.standard_normal((ns, H)).astype(np.float32)
+    thd = rng.standard_normal((R * B, H)).astype(np.float32)
+    hs = rng.standard_normal((ns, H, Dh)).astype(np.float32)
+    bias = rng.standard_normal((H,)).astype(np.float32)
+    single = seg_gat_agg(
+        jnp.asarray(col), jnp.asarray(masks), jnp.asarray(ths), jnp.asarray(thd),
+        jnp.asarray(hs), edge_bias=jnp.asarray(bias), interpret=True,
+    )
+    multi = seg_gat_agg_multigraph(
+        jnp.asarray(col), jnp.zeros((R,), jnp.int32), jnp.arange(R, dtype=jnp.int32),
+        jnp.asarray(masks), jnp.asarray(ths)[None], jnp.asarray(thd)[None],
+        jnp.asarray(hs), jnp.asarray(bias)[None], interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(multi), np.asarray(single), **TOL[jnp.float32])
+
+
+def test_seg_gat_agg_multigraph_vjp_matches_block_autodiff():
+    """The fused Pallas backward must agree with autodiff of the pure-jnp
+    BLOCK oracle (stages.block_softmax_aggregate) for every input."""
+    from repro.core.stages import block_softmax_aggregate
+    from repro.kernels import seg_gat_agg_multigraph
+
+    rng = np.random.default_rng(3)
+    B, R, W, H, Dh, nblk = 8, 3, 2, 2, 8, 4
+    ns = nblk * B
+    col = _unique_cols(rng, R, W, nblk)
+    masks = rng.random((R, W, B, B)) < 0.4
+    ths = jnp.asarray(rng.standard_normal((ns, H)).astype(np.float32))
+    thd = jnp.asarray(rng.standard_normal((R * B, H)).astype(np.float32))
+    hs = jnp.asarray(rng.standard_normal((ns, H, Dh)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal((H,)).astype(np.float32))
+    colj, masksj = jnp.asarray(col), jnp.asarray(masks)
+    gid = jnp.zeros((R,), jnp.int32)
+    row = jnp.arange(R, dtype=jnp.int32)
+
+    def f_kernel(a, b, c, d):
+        out = seg_gat_agg_multigraph(
+            colj, gid, row, masksj, a[None], b[None], c, d[None], interpret=True
+        )
+        return jnp.sum(jnp.sin(out))
+
+    def f_ref(a, b, c, d):
+        out = block_softmax_aggregate(colj, masksj, a, b, c, edge_bias=d)
+        return jnp.sum(jnp.sin(out))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(ths, thd, hs, bias)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2, 3))(ths, thd, hs, bias)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
 def test_seg_gat_agg_multigraph_matches_multilane_oracle():
     """The multi-lane kernel (§4.2 at Pallas level): mixed-graph work units
     in one launch must match the per-unit jnp online-softmax oracle."""

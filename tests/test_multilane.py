@@ -45,6 +45,22 @@ def test_multilane_matches_reference_any_lane_count(dblp_setup, lanes):
         )
 
 
+@pytest.mark.parametrize("lanes", [1, 4])
+def test_multilane_kernel_backend_matches_reference(dblp_setup, lanes):
+    """backend="kernel_interpret" (one fused Pallas launch for all lanes'
+    units) must match the vmap reference on the same plan."""
+    batches, ths, thd, hs = dblp_setup
+    plan = build_multilane_plan(batches, lanes)
+    ref = multilane_na(plan, ths, thd, hs)
+    ker = multilane_na(plan, ths, thd, hs, backend="kernel_interpret")
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref), atol=1e-5)
+
+
+def test_multilane_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="backend"):
+        multilane_na(None, None, None, None, backend="nope")
+
+
 def test_balanced_beats_naive_on_skewed_workload(dblp_setup):
     batches, *_ = dblp_setup
     plan_b = build_multilane_plan(batches, 4, balanced=True)
