@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived[,backend=...]`` CSV rows:
   kernel/*           — kernel-level backends (fused online-softmax NA)
   multilane/*        — fused multigraph kernel vs vmap reference vs
                        per-graph loop across G semantic graphs
+  fp_cache/*         — serving-tier FP cache: hit rate vs capacity,
+                       similarity vs FIFO admission (measured Fig. 15)
   roofline/*         — §Roofline terms per (arch × shape × mesh), from
                        the dry-run artifacts (run launch/dryrun first)
 
@@ -37,6 +39,7 @@ def main() -> None:
 
     from . import (
         breakdown,
+        fp_cache,
         fusion_ablation,
         kernels_bench,
         lanes,
@@ -53,6 +56,7 @@ def main() -> None:
         "similarity": similarity.run,
         "kernels": kernels_bench.run,
         "multilane": multilane_bench.run,
+        "fp_cache": fp_cache.run,
         "stage_roofline": stage_roofline.run,
         "roofline": roofline.run,
     }

@@ -1,0 +1,81 @@
+"""Serve HGNN graph requests with a cross-request FP cache.
+
+    PYTHONPATH=src python examples/serve_hgnn.py
+
+Twelve concurrent subgraph queries over the synthetic IMDB HetGraph
+arrive in an adversarial interleaved order (director-heavy, actor-heavy
+and keyword-heavy requests alternating).  Similarity-aware admission
+reorders and co-batches them so consecutive requests share
+projected-feature blocks; the FIFO baseline thrashes the cache.  Outputs
+are bit-identical either way — the cache only removes recomputation.
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import NABackend
+from repro.graphs import synthetic_hetgraph
+from repro.serve import HGNNEngine, make_request_mix
+
+CLUSTERS = [
+    [("movie", "director", "movie"), ("movie", "director", "movie", "director", "movie")],
+    [("movie", "actor", "movie"), ("movie", "actor", "movie", "actor", "movie")],
+    [("movie", "keyword", "movie")],
+]
+
+
+def build_engine(graph, admission, cache_bytes):
+    return HGNNEngine(
+        graph,
+        target_type="movie",
+        num_slots=2,
+        cache_bytes=cache_bytes,
+        cache_block_rows=64,
+        admission=admission,
+        backend=NABackend.BLOCK,  # NABackend.MULTIGRAPH on TPU
+        block=8,
+        max_edges=8_000,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=4)
+    args = ap.parse_args()
+
+    graph = synthetic_hetgraph("imdb", scale=0.05, feat_scale=0.02, seed=0)
+    out_bytes = 2 * 8 * 4  # heads * hidden * fp32
+    table = {t: n * out_bytes for t, n in graph.vertex_counts.items()}
+    cache_bytes = table["movie"] + max(table.values()) + 64 * out_bytes
+
+    results = {}
+    for admission in ("fifo", "similarity"):
+        eng = build_engine(graph, admission, cache_bytes)
+        for req in make_request_mix(0, CLUSTERS, repeats=args.repeats):
+            eng.submit(req)
+        t0 = time.perf_counter()
+        finished = eng.run()
+        dt = time.perf_counter() - t0
+        m = eng.metrics()
+        results[admission] = (finished, m)
+        print(f"[{admission}] {m['requests_finished']} requests, {m['steps']} steps, "
+              f"{dt:.2f}s  hit_rate={m['cache_hit_rate']:.2f} "
+              f"fp_rows_computed={m['fp_rows_computed']} "
+              f"(naive {m['fp_rows_naive']}, {m['fp_compute_reduction']:.1f}x saved)")
+        for req in finished[:3]:
+            emb = np.asarray(req.result)
+            print(f"  rid={req.rid} admitted@{req.admitted_step} finished@{req.finished_step} "
+                  f"beta={np.round(np.asarray(req.beta), 3).tolist()} |emb|={np.linalg.norm(emb):.3f}")
+
+    fifo, sim = results["fifo"][1], results["similarity"][1]
+    print(f"\nsimilarity admission computes "
+          f"{fifo['fp_rows_computed'] / max(sim['fp_rows_computed'], 1):.1f}x fewer FP rows than FIFO")
+    a = {r.rid: np.asarray(r.result) for r in results["fifo"][0]}
+    b = {r.rid: np.asarray(r.result) for r in results["similarity"][0]}
+    assert all(np.array_equal(a[k], b[k]) for k in a), "admission order changed results!"
+    print("outputs bit-identical across admission policies")
+
+
+if __name__ == "__main__":
+    main()

@@ -80,13 +80,16 @@ def fp_buffer_traffic(
     """Simulate FP-Buf residency across an execution order of semantic graphs.
 
     Each semantic graph needs the projected tables of every type on its
-    metapath.  Tables still resident from the previous graphs are reused;
-    the rest are fetched.  Eviction is LRU at table granularity; tables
-    larger than the buffer stream through (always fetched), matching the
-    paper's observation that the benefit appears when the total projected
-    footprint exceeds FP-Buf but consecutive graphs overlap.
+    metapath.  Table bytes still resident from the previous graphs are
+    reused; the rest are fetched.  Eviction is LRU at table granularity.
+    A table larger than the whole buffer can never be fully resident: the
+    buffer retains as much of it as fits (a prefix of its blocks) and on
+    the next access that resident part is reused while only the missing
+    remainder is re-fetched — partial-block refetch, matching the serving
+    tier's block-granular FP cache (serve/fp_cache.py) rather than
+    charging a full miss.
     """
-    resident: dict[str, int] = {}  # type -> bytes
+    resident: dict[str, int] = {}  # type -> resident bytes (<= table size)
     lru: list[str] = []
     reused = 0
     fetched = 0
@@ -94,17 +97,17 @@ def fp_buffer_traffic(
         sg = sgs[gi]
         for t in dict.fromkeys(sg.path_types):  # stable unique
             size = vertex_counts[t] * bytes_per_vertex[t]
-            if t in resident:
-                reused += size
+            have = min(resident.pop(t, 0), size)
+            if t in lru:
                 lru.remove(t)
-                lru.append(t)
+            reused += have
+            fetched += size - have
+            want = min(size, fpbuf_bytes)  # partial residency if size > buf
+            if want == 0:
                 continue
-            fetched += size
-            if size > fpbuf_bytes:
-                continue  # streams through, never resident
-            while sum(resident.values()) + size > fpbuf_bytes and lru:
+            while sum(resident.values()) + want > fpbuf_bytes and lru:
                 evict = lru.pop(0)
                 del resident[evict]
-            resident[t] = size
+            resident[t] = want
             lru.append(t)
     return FPTraffic(reused_bytes=reused, fetched_bytes=fetched)

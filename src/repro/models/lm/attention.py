@@ -250,30 +250,34 @@ def attention_decode(
     x: jnp.ndarray,            # [B, 1, D]
     cfg: LMConfig,
     cache: AttnCache,
-    cache_pos: jnp.ndarray,    # scalar int32: absolute position of this token
+    cache_pos: jnp.ndarray,    # int32 scalar, or [B] per-slot positions
     *,
     angles: jnp.ndarray | None,  # [B, 1, Dh//2]
     window: int | None = None,
 ) -> tuple[jnp.ndarray, AttnCache]:
-    """Single-token decode against a (possibly ring-buffered) KV cache."""
+    """Single-token decode against a (possibly ring-buffered) KV cache.
+
+    ``cache_pos`` may be a per-batch-row vector: continuous batching
+    admits requests mid-stream, and each slot masks/writes at its OWN
+    ring position (serve/batcher.py) rather than a shared counter."""
     b = x.shape[0]
     q, k_new, v_new = _project_qkv(params, x, cfg)
     if angles is not None:
         q = apply_rope(q, angles)
         k_new = apply_rope(k_new, angles)
     slot_len = cache.k.shape[1]
+    cp = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
     if window is not None:
-        slot = cache_pos % slot_len  # ring buffer
+        slot = cp % slot_len  # ring buffer
     else:
-        slot = jnp.minimum(cache_pos, slot_len - 1)
-    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
-    pos = jax.lax.dynamic_update_slice(
-        cache.pos, jnp.broadcast_to(cache_pos, (b, 1)).astype(jnp.int32), (0, slot)
-    )
-    valid = (pos >= 0) & (pos <= cache_pos)
+        slot = jnp.minimum(cp, slot_len - 1)
+    rows = jnp.arange(b)
+    k = cache.k.at[rows, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[rows, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    pos = cache.pos.at[rows, slot].set(cp)
+    valid = (pos >= 0) & (pos <= cp[:, None])
     if window is not None:
-        valid &= pos > cache_pos - window
+        valid &= pos > (cp - window)[:, None]
     out = _sdpa_xla(q, k, v, valid[:, None, :], cfg)  # [B,1,Hq,Dh]
     out = out.reshape(b, 1, cfg.num_heads * cfg.head_dim)
     return out @ params["wo"].astype(x.dtype), AttnCache(k=k, v=v, pos=pos)

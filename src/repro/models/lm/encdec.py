@@ -164,10 +164,12 @@ def precompute_cross(params, cfg: LMConfig, enc_out: jnp.ndarray):
 
 def decode_step(params, cfg: LMConfig, tokens, cache_pos, caches, cross_kv):
     """One decoder token.  caches: stacked self-attn caches; cross_kv:
-    stacked (k, v) from precompute_cross."""
+    stacked (k, v) from precompute_cross.  ``cache_pos`` may be a [B]
+    vector of per-slot positions (continuous batching)."""
     b = tokens.shape[0]
+    cp = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
     h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
-    h = h + jax.lax.dynamic_slice_in_dim(params["dec_pos"], cache_pos, 1, 0)[None, 0:1].astype(h.dtype)
+    h = h + jnp.take(params["dec_pos"], cp, axis=0)[:, None].astype(h.dtype)
 
     def block(hh, xs):
         p, cache, ckv = xs

@@ -297,12 +297,12 @@ def decode_step(
     params: dict,
     cfg: LMConfig,
     tokens: jnp.ndarray,      # [B, 1]
-    cache_pos: jnp.ndarray,   # scalar int32
+    cache_pos: jnp.ndarray,   # int32 scalar, or [B] per-slot positions
     caches,
 ) -> tuple[jnp.ndarray, Any]:
     """One decode step: returns (logits [B, 1, vocab_padded], new caches)."""
     b = tokens.shape[0]
-    pos = jnp.broadcast_to(cache_pos, (b, 1)).astype(jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))[:, None]
     positions = jnp.broadcast_to(pos[..., None], (b, 1, 3)) if cfg.m_rope else pos
     angles = _angles(cfg, positions)
 

@@ -1,3 +1,15 @@
 from .engine import ServeState, make_prefill, make_serve_step, init_serve_state
+from .fp_cache import FPCache, FPCacheStats
+from .hgnn_engine import GraphRequest, HGNNEngine, make_request_mix
 
-__all__ = ["ServeState", "make_prefill", "make_serve_step", "init_serve_state"]
+__all__ = [
+    "ServeState",
+    "make_prefill",
+    "make_serve_step",
+    "init_serve_state",
+    "FPCache",
+    "FPCacheStats",
+    "GraphRequest",
+    "HGNNEngine",
+    "make_request_mix",
+]

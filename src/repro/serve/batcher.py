@@ -2,9 +2,13 @@
 
 Production serving keeps the decode batch full by admitting new requests
 into slots as old ones finish — the decode step itself never recompiles
-(static shapes).  Per-slot position counters ride in the cache `pos`
-arrays (attention masks are per-slot valid-position tests, so slots at
-different depths coexist in one batched step).
+(static shapes).  Each slot carries its own cache position: the decode
+step takes a [B] vector of per-slot positions, so a request admitted
+mid-stream masks and writes at ITS OWN ring position starting from 0,
+while older slots continue at their depths.  (The earlier reference
+implementation shared one global counter across slots, which both wasted
+cache capacity and clamped at ``cache_len``; per-slot positions remove
+that limitation.)
 
 This is the HiHGNN workload-balance idea at the serving layer: slots are
 lanes, the admission queue is the overflow-workload list, and the
@@ -20,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.lm.api import LMApi
-from .engine import ServeState, init_serve_state, make_serve_step
+from .engine import ServeState, init_serve_state
 
 
 @dataclasses.dataclass
@@ -52,24 +56,27 @@ class ContinuousBatcher:
         # per-slot serving state: independent caches stacked on batch dim
         self.state = init_serve_state(api, num_slots, cache_len, dtype=jnp.float32)
         self.slot_req: list[Request | None] = [None] * num_slots
-        self.slot_pos = np.zeros(num_slots, np.int64)  # per-slot abs position
+        self.slot_pos = np.zeros(num_slots, np.int32)  # per-slot cache position
         self.slot_pending: list[list[int]] = [[] for _ in range(num_slots)]
         self.queue: list[Request] = []
         self.finished: list[Request] = []
         self._step = self._build_step()
 
     def _build_step(self) -> Callable:
-        serve = make_serve_step(self.api)
         cfg = self.api.cfg
+        api = self.api
 
-        def step(params, state: ServeState, tokens, slot_positions):
-            # per-slot positions: we step all slots with the *max* position
-            # as cache_pos and rely on the per-slot pos arrays in the cache
-            # for masking; slots write at their own ring positions via the
-            # shared counter. Reference impl: one shared counter (slots
-            # admitted at the current global position).
-            logits, new_state = serve(params, state, tokens)
-            nxt = jnp.argmax(logits[:, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+        def step(params, state: ServeState, tokens, slot_pos):
+            # slot_pos [B]: every slot masks and writes at its own cache
+            # position (models/lm decode paths broadcast scalar-or-vector)
+            kw = {}
+            if cfg.is_encoder_decoder:
+                kw["cross_kv"] = state.cross_kv
+            logits, caches = api.decode(params, tokens, slot_pos, state.caches, **kw)
+            nxt = jnp.argmax(logits[:, 0, : cfg.vocab_size], axis=-1).astype(jnp.int32)
+            new_state = ServeState(
+                caches=caches, cache_pos=state.cache_pos + 1, cross_kv=state.cross_kv
+            )
             return nxt, new_state
 
         return jax.jit(step)
@@ -80,21 +87,27 @@ class ContinuousBatcher:
     def _reset_slot(self, s: int) -> None:
         """Invalidate slot s's cache rows so a newly admitted request never
         attends to the previous occupant (pos -1 == masked; states zeroed).
-        The slot (batch) dim is located by size: dim 1 for scan-stacked
-        leaves [n_layers, B, ...], dim 0 for unstacked [B, ...]."""
-        B = self.num_slots
+        The slot dim follows the init_caches layout: ``caches["scan"]``
+        leaves are scan-stacked [n_super, B, ...] (slot dim 1),
+        ``caches["tail"]`` leaves are [B, ...] (slot dim 0) — located by
+        structure, not by size, so num_slots == n_layers stays correct."""
 
-        def reset(x):
-            dim = 1 if x.ndim > 1 and x.shape[1] == B and x.shape[0] != B else 0
-            if x.shape[dim] != B:
-                return x
-            idx = (slice(None),) * dim + (s,)
-            if jnp.issubdtype(x.dtype, jnp.integer):
-                return x.at[idx].set(-1)
-            return x.at[idx].set(0)
+        def reset_at(dim: int):
+            def reset(x):
+                idx = (slice(None),) * dim + (s,)
+                if jnp.issubdtype(x.dtype, jnp.integer):
+                    return x.at[idx].set(-1)
+                return x.at[idx].set(0)
 
+            return reset
+
+        caches = dict(self.state.caches)
+        if "scan" in caches:
+            caches["scan"] = jax.tree_util.tree_map(reset_at(1), caches["scan"])
+        if "tail" in caches:
+            caches["tail"] = jax.tree_util.tree_map(reset_at(0), caches["tail"])
         self.state = ServeState(
-            caches=jax.tree_util.tree_map(reset, self.state.caches),
+            caches=caches,
             cache_pos=self.state.cache_pos,
             cross_kv=self.state.cross_kv,
         )
@@ -105,6 +118,7 @@ class ContinuousBatcher:
                 req = self.queue.pop(0)
                 self._reset_slot(s)
                 self.slot_req[s] = req
+                self.slot_pos[s] = 0  # fresh request starts at ITS position 0
                 self.slot_pending[s] = list(req.prompt)
 
     def step(self) -> int:
@@ -122,7 +136,7 @@ class ContinuousBatcher:
             else:
                 tokens[s, 0] = req.prompt[-1]
         nxt, self.state = self._step(
-            self.params, self.state, jnp.asarray(tokens), None
+            self.params, self.state, jnp.asarray(tokens), jnp.asarray(self.slot_pos)
         )
         nxt = np.asarray(nxt)
         active = 0
@@ -131,6 +145,7 @@ class ContinuousBatcher:
             if req is None:
                 continue
             active += 1
+            self.slot_pos[s] += 1
             if not self.slot_pending[s]:  # prompt fully injected -> emit
                 req.out.append(int(nxt[s]))
                 if req.done:

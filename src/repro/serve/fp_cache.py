@@ -1,0 +1,189 @@
+"""Cross-request projected-feature (FP) block cache.
+
+The paper's FP-Buf (§4.3.1) keeps projected feature tables resident so
+the next semantic graph reuses them instead of re-fetching from HBM.
+``core/reuse.py:fp_buffer_traffic`` *models* that traffic; this module is
+the same idea made operational at the serving tier: a capacity-bounded
+cache of projected-feature **row blocks**, keyed by
+``(vertex_type, block_index, version)``, shared across concurrent graph
+requests.  A request's FP stage projects only the blocks the cache does
+not hold; everything else is served from cache — so ``reused_bytes`` /
+``fetched_bytes`` here are *measured* counterparts of the model's
+``FPTraffic`` accounting.
+
+Block granularity (``block_rows`` vertices per block) is what lets a
+buffer smaller than one type's full table still help: the resident
+prefix is reused and only the missing blocks are recomputed — the
+partial-block refetch the analytical model also implements.
+
+Eviction policies:
+
+* ``lru``        — least-recently-used block first.
+* ``similarity`` — similarity-weighted: evict the block whose vertex
+  type has the least demand from the pending request queue (the engine
+  refreshes demand each admission round via :meth:`set_demand`);
+  ties fall back to LRU order.
+
+Coherence: when a vertex type's raw features (or its projection weights)
+change, :meth:`invalidate` bumps that type's version and drops its
+blocks — entries under the old version can never be served again
+(DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from ..core import stages
+from ..core.reuse import FPTraffic
+
+
+@dataclasses.dataclass
+class FPCacheStats:
+    """Measured counterpart of ``core/reuse.py:FPTraffic``."""
+
+    hits: int = 0
+    misses: int = 0
+    reused_bytes: int = 0
+    fetched_bytes: int = 0
+    evicted_bytes: int = 0
+    rows_reused: int = 0
+    rows_computed: int = 0
+    invalidations: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+    @property
+    def reuse_fraction(self) -> float:
+        return self.reused_bytes / max(self.reused_bytes + self.fetched_bytes, 1)
+
+    def traffic(self) -> FPTraffic:
+        """The measured FP traffic in the analytical model's own type."""
+        return FPTraffic(reused_bytes=self.reused_bytes, fetched_bytes=self.fetched_bytes)
+
+
+# One compiled program per (block shape, weight shape); shared by the
+# cached and uncached paths so outputs are bit-identical either way.
+_project_block = jax.jit(stages.feature_projection)
+
+
+class FPCache:
+    """Capacity-bounded cache of projected-feature row blocks."""
+
+    def __init__(
+        self,
+        capacity_bytes: int,
+        *,
+        block_rows: int = 128,
+        policy: str = "lru",
+    ):
+        assert policy in ("lru", "similarity"), policy
+        assert capacity_bytes >= 0 and block_rows > 0
+        self.capacity_bytes = int(capacity_bytes)
+        self.block_rows = int(block_rows)
+        self.policy = policy
+        # key -> block, in LRU order (oldest first)
+        self._blocks: OrderedDict[tuple[str, int, int], jnp.ndarray] = OrderedDict()
+        self._bytes = 0
+        self._version: dict[str, int] = {}
+        self._demand: dict[str, float] = {}
+        self.stats = FPCacheStats()
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def resident_bytes(self) -> int:
+        return self._bytes
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self._blocks)
+
+    def resident_types(self) -> set[str]:
+        return {k[0] for k in self._blocks}
+
+    def version(self, vtype: str) -> int:
+        return self._version.get(vtype, 0)
+
+    # -- coherence ----------------------------------------------------------
+
+    def invalidate(self, vtype: str) -> None:
+        """Coherence rule: raw features / projection weights of ``vtype``
+        changed.  Bump the version (old-version keys can never match) and
+        drop the now-stale blocks eagerly."""
+        self._version[vtype] = self.version(vtype) + 1
+        for key in [k for k in self._blocks if k[0] == vtype]:
+            self._drop(key)
+        self.stats.invalidations += 1
+
+    # -- admission / eviction ----------------------------------------------
+
+    def set_demand(self, demand: Mapping[str, float]) -> None:
+        """Per-type demand of the pending queue (for the similarity-weighted
+        eviction policy).  Refreshed by the engine each admission round."""
+        self._demand = dict(demand)
+
+    def _drop(self, key) -> None:
+        blk = self._blocks.pop(key)
+        nbytes = int(blk.size) * blk.dtype.itemsize
+        self._bytes -= nbytes
+        self.stats.evicted_bytes += nbytes
+
+    def _victim(self):
+        if self.policy == "lru":
+            return next(iter(self._blocks))
+        # similarity-weighted: least queue demand first; min() scans in
+        # OrderedDict (LRU) order, so ties resolve to the oldest block
+        return min(self._blocks, key=lambda k: self._demand.get(k[0], 0.0))
+
+    def _insert(self, key, blk: jnp.ndarray) -> None:
+        nbytes = int(blk.size) * blk.dtype.itemsize
+        if nbytes > self.capacity_bytes:
+            return  # a single block larger than the cache streams through
+        while self._bytes + nbytes > self.capacity_bytes and self._blocks:
+            self._drop(self._victim())
+        self._blocks[key] = blk
+        self._bytes += nbytes
+
+    # -- the FP stage -------------------------------------------------------
+
+    def project(
+        self,
+        vtype: str,
+        x: jnp.ndarray,   # [N, Din] raw features
+        w: jnp.ndarray,   # [Din, H*Dh]
+        b: jnp.ndarray | None = None,
+    ) -> jnp.ndarray:
+        """Projected table ``x @ w + b`` for ``vtype``, block by block:
+        resident blocks are served from cache, missing blocks computed and
+        admitted.  Both paths run the same jitted block program, so the
+        result is bit-identical to uncached recomputation."""
+        ver = self.version(vtype)
+        n = int(x.shape[0])
+        br = self.block_rows
+        out = []
+        for bi in range((n + br - 1) // br):
+            key = (vtype, bi, ver)
+            blk = self._blocks.get(key)
+            rows = min(br, n - bi * br)
+            if blk is not None:
+                self._blocks.move_to_end(key)
+                nbytes = int(blk.size) * blk.dtype.itemsize
+                self.stats.hits += 1
+                self.stats.reused_bytes += nbytes
+                self.stats.rows_reused += rows
+            else:
+                blk = _project_block(x[bi * br : bi * br + rows], w, b)
+                nbytes = int(blk.size) * blk.dtype.itemsize
+                self.stats.misses += 1
+                self.stats.fetched_bytes += nbytes
+                self.stats.rows_computed += rows
+                self._insert(key, blk)
+            out.append(blk)
+        return out[0] if len(out) == 1 else jnp.concatenate(out, axis=0)

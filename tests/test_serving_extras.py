@@ -40,6 +40,43 @@ def test_continuous_batcher_matches_sequential():
         assert got[i] == ref, (i, got[i], ref)
 
 
+def test_continuous_batcher_midstream_admission_tight_cache():
+    """Per-slot cache positions: requests admitted mid-stream must decode
+    correctly even when the TOTAL number of engine steps far exceeds
+    ``cache_len``.  (The earlier shared-global-counter design clamped the
+    position at ``cache_len`` — later waves then overwrote one ring slot
+    and diverged from sequential decoding.)"""
+    from repro.serve.batcher import ContinuousBatcher, Request
+    from repro.serve.engine import greedy_generate
+
+    cfg = smoke_config("llama3.2-3b")
+    api = build(cfg)
+    params = api.init(jax.random.key(1))
+    rng = np.random.default_rng(1)
+    # varied prompt/max_new so slots free at different times (staggered
+    # waves); each request fits cache_len=16 but the run takes ~30 steps
+    jobs = [(rng.integers(0, cfg.vocab_size, 4 + i % 4).tolist(), 3 + i % 3)
+            for i in range(6)]
+
+    refs = []
+    for p, n in jobs:
+        out = greedy_generate(
+            api, params, jnp.asarray([p], jnp.int32), steps=n, cache_len=16
+        )
+        refs.append(np.asarray(out)[0, :n].tolist())
+
+    cb = ContinuousBatcher(api, num_slots=2, cache_len=16, params=params)
+    for i, (p, n) in enumerate(jobs):
+        cb.submit(Request(rid=i, prompt=p, max_new=n))
+    finished = cb.run()
+    assert len(finished) == 6
+    total_steps = sum(len(p) + n for p, n in jobs) // 2  # ~2 slots busy
+    assert total_steps > 16  # the regime the shared counter could not serve
+    got = {r.rid: r.out for r in finished}
+    for i, ref in enumerate(refs):
+        assert got[i] == ref, (i, got[i], ref)
+
+
 def test_gradient_compression_close_to_fp32():
     from repro.data import SyntheticLMData
     from repro.optim import AdamWConfig
