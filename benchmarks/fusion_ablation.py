@@ -101,6 +101,27 @@ def run(report):
             f"staged_us={t_staged:.0f} fused_us={t_fused:.0f} reduction={gain:.0%}",
         )
 
+        # fusion ladder on block-CSR data: unfused per-graph (SEGMENT, the
+        # row above) -> consolidated one-launch (MULTIGRAPH) -> fused-FP
+        # megakernel (FP pulled inside the launch, DESIGN.md §10).
+        # Interpret-mode: structure validation, not a TPU projection.
+        data_b = prepare_data(g, build_semantic_graphs(
+            g, dataset_metapaths(ds), max_edges=12_000), target, ncls, block=16)
+        p_b = model.init(jax.random.key(0), data_b)
+        cons = jax.jit(lambda p: model.forward(
+            p, data_b, backend=NABackend.MULTIGRAPH_INTERPRET))
+        t_cons = timeit(cons, p_b, warmup=1, iters=2)
+        report(f"fusion/{ds}/HAN-consolidated", t_cons,
+               "one multigraph launch, h' materialized (interpret-mode)",
+               backend="multigraph_interpret")
+        fus = jax.jit(lambda p: model.forward(
+            p, data_b, backend=NABackend.FUSED_FP_INTERPRET))
+        t_fus = timeit(fus, p_b, warmup=1, iters=2)
+        report(f"fusion/{ds}/HAN-fused-fp", t_fus,
+               f"one FP+NA megakernel launch, h' never materialized "
+               f"vs_consolidated={t_cons / max(t_fus, 1e-9):.2f}x (interpret-mode)",
+               backend="fused_fp_interpret")
+
         # R-GAT single layer (the paper's biggest fusion winner)
         rel = relation_semantic_graphs(g)
         data_r = prepare_data(g, rel, target, ncls, with_blocks=False)

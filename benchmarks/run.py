@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived[,backend=...]`` CSV rows:
                        per-graph loop across G semantic graphs
   fp_cache/*         — serving-tier FP cache: hit rate vs capacity,
                        similarity vs FIFO admission (measured Fig. 15)
+  stage_fusion/*     — FP+NA stage-fusion megakernel vs materialize-
+                       then-NA vs staged reference (Alg. 2, DESIGN.md §10)
   roofline/*         — §Roofline terms per (arch × shape × mesh), from
                        the dry-run artifacts (run launch/dryrun first)
 
@@ -46,6 +48,7 @@ def main() -> None:
         multilane_bench,
         roofline,
         similarity,
+        stage_fusion,
         stage_roofline,
     )
 
@@ -57,6 +60,7 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "multilane": multilane_bench.run,
         "fp_cache": fp_cache.run,
+        "stage_fusion": stage_fusion.run,
         "stage_roofline": stage_roofline.run,
         "roofline": roofline.run,
     }

@@ -1,0 +1,110 @@
+"""Stage-fusion megakernel (Alg. 2 / DESIGN.md §10) — fused FP+NA vs
+materialize-then-NA vs pure-jnp reference.
+
+Three executors over the SAME work (all semantic graphs of a HAN layer),
+swept over raw feature width Din ∈ {64, 256} × graph count G ∈ {1, 3}:
+
+* ``materialize``  — the consolidated baseline: FP projects h' = x@W+b
+  into HBM, theta einsums read it back, then ONE multigraph NA launch
+  (``MULTIGRAPH_INTERPRET``) consumes it.  h' round-trips through memory.
+* ``fused``        — the megakernel (``FUSED_FP_INTERPRET``): raw x tiles
+  stream into the NA launch and are projected on-chip; h' never
+  materializes.  Same unit tables, same numbers (asserted each shape).
+* ``reference``    — project + per-graph BLOCK-backend loop (pure jnp,
+  G dispatches): the staged shape both fused paths replace.
+
+Interpret-mode timings validate the datapath and the HBM-traffic
+structure on CPU; they are NOT TPU projections (that story is
+``FUSED_FP`` on hardware + benchmarks/stage_roofline.py's measured
+overlap).  Rows carry ``backend=`` so ``run.py --json`` writes the
+BENCH_stage_fusion.json regression baseline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import NABackend, batch_semantic_graph, neighbor_aggregate
+from repro.core.fusion import FusedFPInputs, neighbor_aggregate_multi
+from repro.graphs import build_semantic_graphs, synthetic_hetgraph
+
+from .common import timeit
+
+# author→author metapath pool sharing the dst space (multilane_bench idiom)
+_POOL = [
+    ("author", "paper", "author"),
+    ("author", "paper", "term", "paper", "author"),
+    ("author", "paper", "venue", "paper", "author"),
+]
+
+B, H, DH = 16, 2, 8
+
+
+def run(report):
+    g = synthetic_hetgraph("dblp", scale=0.12, feat_scale=0.1, seed=0)
+    rng = np.random.default_rng(0)
+    for g_count in (1, 3):
+        sgs = build_semantic_graphs(g, _POOL[:g_count], max_edges=20_000)
+        batches = [batch_semantic_graph(s, block=B) for s in sgs]
+        gn = len(batches)
+        ns = batches[0].num_src
+        edges = sum(bb.num_edges for bb in batches)
+        for din in (64, 256):
+            x = jnp.asarray(rng.standard_normal((ns, din)).astype(np.float32))
+            w = jnp.asarray((rng.standard_normal((din, H * DH)) / np.sqrt(din)
+                             ).astype(np.float32))
+            b = jnp.asarray(rng.standard_normal((H * DH,)).astype(np.float32))
+            a_s = jnp.asarray(rng.standard_normal((gn, H, DH)).astype(np.float32))
+            a_d = jnp.asarray(rng.standard_normal((gn, H, DH)).astype(np.float32))
+            tag = f"stage_fusion/din{din}_g{gn}"
+            note = f"edges={edges} din={din} interpret-mode (not a TPU projection)"
+
+            # staged reference: project, then one BLOCK program per graph
+            def reference(x_, w_, b_, a_s_, a_d_):
+                h = (x_ @ w_ + b_).reshape(ns, H, DH)
+                outs = []
+                for i, bb in enumerate(batches):
+                    th_s = jnp.einsum("nhd,hd->nh", h, a_s_[i])
+                    th_d = jnp.einsum("nhd,hd->nh", h, a_d_[i])
+                    outs.append(neighbor_aggregate(
+                        bb, th_s[: bb.num_src], th_d[: bb.num_dst],
+                        h[: bb.num_src], backend=NABackend.BLOCK))
+                return jnp.stack(outs)
+
+            # materialize-then-NA: h' lands in HBM, one multigraph launch
+            def materialize(x_, w_, b_, a_s_, a_d_):
+                h = (x_ @ w_ + b_).reshape(ns, H, DH)
+                th_s = jnp.einsum("nhd,ghd->gnh", h, a_s_)
+                th_d = jnp.einsum("nhd,ghd->gnh", h, a_d_)
+                return neighbor_aggregate_multi(
+                    batches, th_s, th_d, h,
+                    backend=NABackend.MULTIGRAPH_INTERPRET)
+
+            # megakernel: raw x streams in, projection happens on-chip
+            def fused(x_, w_, b_, a_s_, a_d_):
+                fp = FusedFPInputs.shared(x_, w_, b_, a_s_, a_d_)
+                return neighbor_aggregate_multi(
+                    batches, None, None, None,
+                    backend=NABackend.FUSED_FP_INTERPRET, fp=fp)
+
+            ref_j = jax.jit(reference)
+            mat_j = jax.jit(materialize)
+            fus_j = jax.jit(fused)
+            z_mat = mat_j(x, w, b, a_s, a_d)
+            z_fus = fus_j(x, w, b, a_s, a_d)
+            np.testing.assert_allclose(
+                np.asarray(z_fus), np.asarray(z_mat), rtol=1e-4, atol=1e-5)
+
+            t_ref = timeit(ref_j, x, w, b, a_s, a_d, warmup=1, iters=2)
+            report(f"{tag}/reference", t_ref,
+                   f"dispatches={gn} {note}", backend="block")
+            t_mat = timeit(mat_j, x, w, b, a_s, a_d, warmup=1, iters=2)
+            report(f"{tag}/materialize", t_mat,
+                   f"dispatches=1 hbm_hprime_bytes={ns * H * DH * 4} {note}",
+                   backend="multigraph_interpret")
+            t_fus = timeit(fus_j, x, w, b, a_s, a_d, warmup=1, iters=2)
+            report(f"{tag}/fused", t_fus,
+                   f"dispatches=1 hbm_hprime_bytes=0 "
+                   f"vs_materialize={t_mat / max(t_fus, 1e-9):.2f}x {note}",
+                   backend="fused_fp_interpret")

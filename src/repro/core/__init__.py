@@ -3,6 +3,7 @@ execution (lane scheduling), similarity-aware execution scheduling, and
 RAB-style data-reuse accounting."""
 from . import stages
 from .fusion import (
+    FusedFPInputs,
     NABackend,
     SemanticGraphBatch,
     batch_semantic_graph,
@@ -24,6 +25,7 @@ from .scheduling import (
 
 __all__ = [
     "stages",
+    "FusedFPInputs",
     "NABackend",
     "SemanticGraphBatch",
     "batch_semantic_graph",

@@ -42,9 +42,24 @@ class NABackend(enum.Enum):
     # datapath.  Differentiable (custom VJP with a fused backward launch).
     MULTIGRAPH = "multigraph"
     MULTIGRAPH_INTERPRET = "multigraph_interpret"
+    # stage-fusion megakernel (kernels/seg_gat_agg_fused_fp): the
+    # multigraph launch with the FP stage pulled INSIDE — raw features
+    # stream from HBM and are projected on-chip against per-graph weight
+    # tables; h' never materializes (paper Alg. 2, DESIGN.md §10).
+    # Requires fp=FusedFPInputs instead of theta/h operands.
+    FUSED_FP = "fused_fp"
+    FUSED_FP_INTERPRET = "fused_fp_interpret"
 
 
 _MULTIGRAPH_BACKENDS = (NABackend.MULTIGRAPH, NABackend.MULTIGRAPH_INTERPRET)
+_FUSED_FP_BACKENDS = (NABackend.FUSED_FP, NABackend.FUSED_FP_INTERPRET)
+# materialized-path equivalent of each fused backend (e.g. for serving's
+# FP-cache-hit bypass: the projected table already exists, so re-projecting
+# inside the kernel would waste the cache)
+_FUSED_TO_MULTIGRAPH = {
+    NABackend.FUSED_FP: NABackend.MULTIGRAPH,
+    NABackend.FUSED_FP_INTERPRET: NABackend.MULTIGRAPH_INTERPRET,
+}
 
 
 @dataclasses.dataclass
@@ -127,6 +142,46 @@ def batch_semantic_graph(
         path_types=sg.path_types,
         **kw,
     )
+
+
+@dataclasses.dataclass
+class FusedFPInputs:
+    """Operands of the FUSED_FP backends: raw features plus the projection
+    and attention parameters the megakernel applies on-chip (in place of
+    the materialized theta_src/theta_dst/h_src of the other backends).
+
+    ``w``/``b`` are stacked per weight *table* and ``wsel`` maps each
+    semantic graph to its table — graphs sharing a projection (HAN: all of
+    them) share one table instead of carrying G copies through HBM.
+    """
+
+    x: jnp.ndarray       # [N, Din]      raw features (shared src/dst space)
+    w: jnp.ndarray       # [T, Din, H*Dh] per-table projection weights
+    b: jnp.ndarray       # [T, H*Dh]
+    a_src: jnp.ndarray   # [G, H, Dh]
+    a_dst: jnp.ndarray   # [G, H, Dh]
+    wsel: jnp.ndarray    # int32 [G]     graph -> weight-table row
+
+    @classmethod
+    def shared(cls, x, w, b, a_src, a_dst) -> "FusedFPInputs":
+        """All graphs project through ONE weight table (HAN's layout)."""
+        g_n = a_src.shape[0]
+        return cls(
+            x=x,
+            w=w[None] if w.ndim == 2 else w,
+            b=b[None] if b.ndim == 1 else b,
+            a_src=a_src,
+            a_dst=a_dst,
+            wsel=jnp.zeros((g_n,), jnp.int32),
+        )
+
+
+_FP_FIELDS = ("x", "w", "b", "a_src", "a_dst", "wsel")
+jax.tree_util.register_pytree_node(
+    FusedFPInputs,
+    lambda fp: (tuple(getattr(fp, f) for f in _FP_FIELDS), None),
+    lambda _, ch: FusedFPInputs(**dict(zip(_FP_FIELDS, ch))),
+)
 
 
 def _pad_rows(x: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -221,14 +276,15 @@ def build_unit_tables(batches: list[SemanticGraphBatch]):
 
 def neighbor_aggregate_multi(
     batches: list[SemanticGraphBatch],
-    theta_src: jnp.ndarray,  # [G, Ns, H]
-    theta_dst: jnp.ndarray,  # [G, Nd, H]
-    h_src: jnp.ndarray,      # [Ns, H, Dh] (shared across graphs)
+    theta_src: jnp.ndarray | None,  # [G, Ns, H]   (None with FUSED_FP)
+    theta_dst: jnp.ndarray | None,  # [G, Nd, H]   (None with FUSED_FP)
+    h_src: jnp.ndarray | None,      # [Ns, H, Dh]  (None with FUSED_FP)
     *,
     backend: NABackend = NABackend.MULTIGRAPH_INTERPRET,
     leaky_slope: float = 0.2,
     edge_bias: jnp.ndarray | None = None,  # [G, H]
     unit_tables: tuple | None = None,
+    fp: FusedFPInputs | None = None,
 ) -> jnp.ndarray:
     """NA for ALL semantic graphs of a layer at once.  Returns
     [G, num_dst, H, Dh].
@@ -239,7 +295,43 @@ def neighbor_aggregate_multi(
     ``neighbor_aggregate`` — same semantics, G separate dispatches.
     ``unit_tables`` (from :func:`build_unit_tables`) may be passed to skip
     the host-side stacking inside jitted callers.
+
+    With a FUSED_FP backend the FP stage runs *inside* the launch: pass
+    ``fp=FusedFPInputs(...)`` (raw features + projection/attention params)
+    and leave theta_src/theta_dst/h_src as None — no projected tensor is
+    ever materialized in HBM (DESIGN.md §10).
     """
+    if backend in _FUSED_FP_BACKENDS:
+        if fp is None:
+            raise ValueError(
+                "FUSED_FP backends take fp=FusedFPInputs (raw features + "
+                "weight tables) in place of theta_src/theta_dst/h_src"
+            )
+        from ..kernels.seg_gat_agg_fused_fp import seg_gat_agg_fused_fp
+
+        b0 = batches[0]
+        assert b0.num_src == b0.num_dst, (
+            "fused FP+NA streams ONE raw-feature table for both src and dst "
+            "tiles; src and dst must share the vertex space (HAN's "
+            "target-type metapath graphs do)"
+        )
+        b = b0.block
+        nd = b0.num_dst
+        nd_pad = b0.num_dst_pad
+        ns_pad = ((b0.num_src + b - 1) // b) * b
+        if unit_tables is None:
+            unit_tables = build_unit_tables(batches)
+        col, gid, row, masks = unit_tables
+        x_pad = _pad_rows(fp.x, max(ns_pad, nd_pad))
+        out = seg_gat_agg_fused_fp(
+            col, gid, row, fp.wsel, masks, x_pad, fp.w, fp.b,
+            fp.a_src, fp.a_dst, edge_bias,
+            leaky_slope=leaky_slope,
+            interpret=backend is NABackend.FUSED_FP_INTERPRET,
+        )  # [G*R*B, H, Dh] — units are g-major, rows in order
+        g_n = len(batches)
+        return out.reshape(g_n, nd_pad, *out.shape[1:])[:, :nd]
+
     if backend not in _MULTIGRAPH_BACKENDS:
         return jnp.stack([
             neighbor_aggregate(

@@ -24,7 +24,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec
 
-from .fusion import SemanticGraphBatch
+from .fusion import FusedFPInputs, SemanticGraphBatch
 from .scheduling import LanePlan, lane_assignment, naive_lane_assignment
 
 NEG_INF = -1e30
@@ -181,18 +181,19 @@ def _unit_na(
     return out.astype(h_src.dtype)
 
 
-MULTILANE_BACKENDS = ("reference", "kernel", "kernel_interpret")
+MULTILANE_BACKENDS = ("reference", "kernel", "kernel_interpret", "fused_fp", "fused_fp_interpret")
 
 
 def multilane_na(
     plan: MultiLanePlan,
-    theta_src: jnp.ndarray,  # [G, Ns_pad, H]
-    theta_dst: jnp.ndarray,  # [G, Nd_pad, H]
-    h_src: jnp.ndarray,      # [Ns_pad, H, Dh]
+    theta_src: jnp.ndarray | None,  # [G, Ns_pad, H]   (None with fused_fp)
+    theta_dst: jnp.ndarray | None,  # [G, Nd_pad, H]   (None with fused_fp)
+    h_src: jnp.ndarray | None,      # [Ns_pad, H, Dh]  (None with fused_fp)
     *,
     edge_bias: jnp.ndarray | None = None,  # [G, H]
     leaky_slope: float = 0.2,
     backend: str = "reference",
+    fp: FusedFPInputs | None = None,
 ) -> jnp.ndarray:
     """Run NA for all semantic graphs across lanes.
 
@@ -204,16 +205,30 @@ def multilane_na(
         (kernels/seg_gat_agg_multigraph): the paper's mixed-graph lane
         datapath as a single TPU kernel;
       * ``"kernel_interpret"`` — same kernel under the Pallas interpreter
-        (CPU validation / CI).
+        (CPU validation / CI);
+      * ``"fused_fp"`` / ``"fused_fp_interpret"`` — the stage-fusion
+        megakernel (kernels/seg_gat_agg_fused_fp): pass
+        ``fp=FusedFPInputs`` (raw features padded to [N_pad, Din] +
+        projection/attention params) and leave the theta/h operands None;
+        the FP stage runs inside the launch (DESIGN.md §10).
     All backends scatter identically, so they agree to f32 tolerance.
     """
     if backend not in MULTILANE_BACKENDS:
         raise ValueError(f"backend={backend!r}, expected one of {MULTILANE_BACKENDS}")
-    g_n, _, h_dim = theta_src.shape
-    dh = h_src.shape[-1]
+    fused_fp = backend in ("fused_fp", "fused_fp_interpret")
+    if fused_fp:
+        if fp is None:
+            raise ValueError(f"backend={backend!r} needs fp=FusedFPInputs")
+        g_n, h_dim, dh = fp.a_src.shape
+        out_dtype = fp.x.dtype
+    else:
+        g_n, _, h_dim = theta_src.shape
+        dh = h_src.shape[-1]
+        out_dtype = h_src.dtype
     if edge_bias is None:
-        edge_bias = jnp.zeros((g_n, h_dim), h_src.dtype)
+        edge_bias = jnp.zeros((g_n, h_dim), out_dtype)
 
+    lanes, units, w = plan.col_index.shape
     if backend == "reference":
         unit_fn = lambda c, m, g, r: _unit_na(
             c, m, g, r, theta_src, theta_dst, h_src, edge_bias, leaky_slope
@@ -221,10 +236,23 @@ def multilane_na(
         per_unit = jax.vmap(jax.vmap(unit_fn))(
             plan.col_index, plan.masks, plan.graph_id, plan.dst_row
         )  # [L, U, B, H, Dh]
+    elif fused_fp:
+        from repro.kernels.seg_gat_agg_fused_fp import seg_gat_agg_fused_fp
+
+        flat = seg_gat_agg_fused_fp(
+            plan.col_index.reshape(lanes * units, w),
+            plan.graph_id.reshape(lanes * units),
+            plan.dst_row.reshape(lanes * units),
+            fp.wsel,
+            plan.masks.reshape(lanes * units, w, plan.block, plan.block),
+            fp.x, fp.w, fp.b, fp.a_src, fp.a_dst, edge_bias,
+            leaky_slope=leaky_slope,
+            interpret=(backend == "fused_fp_interpret"),
+        )  # [L*U*B, H, Dh]
+        per_unit = flat.reshape(lanes, units, plan.block, h_dim, dh)
     else:
         from repro.kernels.seg_gat_agg_multigraph import seg_gat_agg_multigraph
 
-        lanes, units, w = plan.col_index.shape
         flat = seg_gat_agg_multigraph(
             plan.col_index.reshape(lanes * units, w),
             plan.graph_id.reshape(lanes * units),
@@ -239,7 +267,7 @@ def multilane_na(
         )  # [L*U*B, H, Dh]
         per_unit = flat.reshape(lanes, units, plan.block, h_dim, dh)
 
-    out = jnp.zeros((g_n, plan.n_dst_blocks, plan.block, h_dim, dh), h_src.dtype)
+    out = jnp.zeros((g_n, plan.n_dst_blocks, plan.block, h_dim, dh), out_dtype)
     contrib = jnp.where(plan.valid[:, :, None, None, None], per_unit, 0.0)
     out = out.at[plan.graph_id, plan.dst_row].add(contrib)
     return out.reshape(g_n, plan.n_dst_blocks * plan.block, h_dim, dh)
@@ -247,15 +275,16 @@ def multilane_na(
 
 def multilane_na_sharded(
     plan: MultiLanePlan,
-    theta_src: jnp.ndarray,  # [G, Ns_pad, H]
-    theta_dst: jnp.ndarray,  # [G, Nd_pad, H]
-    h_src: jnp.ndarray,      # [Ns_pad, H, Dh]
+    theta_src: jnp.ndarray | None,  # [G, Ns_pad, H]   (None with fused_fp)
+    theta_dst: jnp.ndarray | None,  # [G, Nd_pad, H]   (None with fused_fp)
+    h_src: jnp.ndarray | None,      # [Ns_pad, H, Dh]  (None with fused_fp)
     *,
     mesh,
     lane_axes: tuple[str, ...] = ("lane",),
     edge_bias: jnp.ndarray | None = None,  # [G, H]
     leaky_slope: float = 0.2,
     backend: str = "reference",
+    fp: FusedFPInputs | None = None,
 ) -> jnp.ndarray:
     """``multilane_na`` with the lane dimension dispatched over mesh chips.
 
@@ -272,9 +301,17 @@ def multilane_na_sharded(
     """
     n_shards = math.prod(mesh.shape[a] for a in lane_axes)
     assert plan.num_lanes % n_shards == 0, (plan.num_lanes, n_shards)
-    g_n, _, h_dim = theta_src.shape
+    fused_fp = backend in ("fused_fp", "fused_fp_interpret")
+    if fused_fp:
+        if fp is None:
+            raise ValueError(f"backend={backend!r} needs fp=FusedFPInputs")
+        g_n, h_dim, _ = fp.a_src.shape
+        bias_dtype = fp.x.dtype
+    else:
+        g_n, _, h_dim = theta_src.shape
+        bias_dtype = h_src.dtype
     if edge_bias is None:
-        edge_bias = jnp.zeros((g_n, h_dim), h_src.dtype)
+        edge_bias = jnp.zeros((g_n, h_dim), bias_dtype)
 
     lane_part = lane_axes[0] if len(lane_axes) == 1 else tuple(lane_axes)
     lane_spec = lambda ndim: PartitionSpec(lane_part, *([None] * (ndim - 1)))
@@ -290,6 +327,28 @@ def multilane_na_sharded(
         lane_plan=None,
     )
     rep = PartitionSpec()
+
+    if fused_fp:
+        # raw features + weight tables replicate like the thetas do: every
+        # lane shard projects the tiles its units touch on-chip (the
+        # functional RAB, now fed from raw x instead of materialized h')
+        fp_specs = jax.tree_util.tree_map(lambda _: rep, fp)
+
+        def local_fp(plan_loc, fp_loc, bias):
+            partial = multilane_na(
+                plan_loc, None, None, None, edge_bias=bias,
+                leaky_slope=leaky_slope, backend=backend, fp=fp_loc,
+            )
+            return jax.lax.psum(partial, lane_axes)
+
+        fn = shard_map(
+            local_fp,
+            mesh=mesh,
+            in_specs=(plan_specs, fp_specs, rep),
+            out_specs=rep,
+            check_rep=False,
+        )
+        return fn(plan, fp, edge_bias)
 
     def local(plan_loc, ths, thd, hs, bias):
         # backend applies per shard: "kernel" = one fused Pallas launch

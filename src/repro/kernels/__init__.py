@@ -10,9 +10,22 @@
 * seg_gat_agg_multigraph — the multi-lane execution (§4.2) in one kernel:
                      work units from different semantic graphs dispatched
                      via scalar-prefetched (graph_id, dst_row) tables
+* seg_gat_agg_fused_fp — the stage-fusion megakernel (Alg. 2): the
+                     multigraph launch with FP pulled inside — raw
+                     feature tiles projected on-chip, h' never
+                     materialized (DESIGN.md §10)
 """
 from . import ops
 from .ops import flash_attention, fused_fp_coeff, seg_gat_agg
+from .seg_gat_agg_fused_fp import fused_fp_na_reference, seg_gat_agg_fused_fp
 from .seg_gat_agg_multigraph import seg_gat_agg_multigraph
 
-__all__ = ["ops", "flash_attention", "fused_fp_coeff", "seg_gat_agg", "seg_gat_agg_multigraph"]
+__all__ = [
+    "ops",
+    "flash_attention",
+    "fused_fp_coeff",
+    "fused_fp_na_reference",
+    "seg_gat_agg",
+    "seg_gat_agg_fused_fp",
+    "seg_gat_agg_multigraph",
+]

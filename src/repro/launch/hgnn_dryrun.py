@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..core.fusion import FusedFPInputs
 from ..core.multilane import MultiLanePlan, multilane_na, multilane_na_sharded
 from ..core.scheduling import LanePlan
 from ..core import stages
@@ -93,11 +94,18 @@ def main():
         "or explicit shard_map over the lane axis",
     )
     ap.add_argument(
-        "--na-backend", choices=("reference", "kernel", "kernel_interpret"),
+        "--na-backend",
+        choices=("reference", "kernel", "kernel_interpret", "fused_fp", "fused_fp_interpret"),
         default="reference",
         help="balanced schedule only: per-unit NA executor for multilane_na "
         "('kernel' = one fused Pallas launch per chip; needs TPU lowering, "
-        "'kernel_interpret' validates the same kernel on CPU)",
+        "'kernel_interpret' validates the same kernel on CPU; 'fused_fp' = "
+        "the FP+NA stage-fusion megakernel streaming RAW features, "
+        "'fused_fp_interpret' its CPU validator)",
+    )
+    ap.add_argument(
+        "--din", type=int, default=256,
+        help="fused_fp backends only: raw feature width streamed into the megakernel",
     )
     ap.add_argument("--out", default="artifacts/dryrun/hgnn_multilane.json")
     args = ap.parse_args()
@@ -125,14 +133,7 @@ def main():
 
     lane_axis = rules.mesh_axes("act_lane")
 
-    def lane_step(plan, th_s, th_d, h_src, w_g, q):
-        na = (
-            (lambda p, a, b, c: multilane_na_sharded(
-                p, a, b, c, mesh=mesh, lane_axes=lane_axis, backend=args.na_backend))
-            if args.executor == "shard_map"
-            else (lambda p, a, b, c: multilane_na(p, a, b, c, backend=args.na_backend))
-        )
-        z = na(plan, th_s, th_d, h_src.astype(jnp.float32))  # [G, N, H, Dh]
+    def _sf_tail(z, w_g, q):
         zf = z.reshape(g, ns_pad, h_dim * dh)
         valid = jnp.ones((ns_pad,), bool)
         w_p = jnp.stack([
@@ -141,6 +142,28 @@ def main():
         ])
         fused, beta = stages.global_semantic_fusion(w_p, zf)
         return fused, beta
+
+    def lane_step(plan, th_s, th_d, h_src, w_g, q):
+        na = (
+            (lambda p, a, b, c: multilane_na_sharded(
+                p, a, b, c, mesh=mesh, lane_axes=lane_axis, backend=args.na_backend))
+            if args.executor == "shard_map"
+            else (lambda p, a, b, c: multilane_na(p, a, b, c, backend=args.na_backend))
+        )
+        z = na(plan, th_s, th_d, h_src.astype(jnp.float32))  # [G, N, H, Dh]
+        return _sf_tail(z, w_g, q)
+
+    def lane_step_fp(plan, fp, w_g, q):
+        # Megakernel path: theta/h' never exist as program inputs — the
+        # kernel streams RAW features and projects on-chip (DESIGN.md §10).
+        if args.executor == "shard_map":
+            z = multilane_na_sharded(
+                plan, None, None, None,
+                mesh=mesh, lane_axes=lane_axis, backend=args.na_backend, fp=fp,
+            )
+        else:
+            z = multilane_na(plan, None, None, None, backend=args.na_backend, fp=fp)
+        return _sf_tail(z, w_g, q)
 
     lane_sh = lambda *rest: NamedSharding(mesh, rules.spec(("act_lane",) + rest))
     feat_sh = NamedSharding(mesh, rules.spec((None, None, "act_feat")))
@@ -170,11 +193,37 @@ def main():
                 valid=lane_sh(None),
                 block=block, num_graphs=g, n_dst_blocks=rows, lane_plan=plan.lane_plan,
             )
-            lowered = jax.jit(
-                lane_step,
-                in_shardings=(plan_sh, rep, rep, feat_sh, rep, rep),
-            ).lower(plan, th_s, th_d, h_src, w_g, q)
-        compiled = lowered.compile()
+            if args.na_backend.startswith("fused_fp"):
+                fp_abs = FusedFPInputs(
+                    x=jax.ShapeDtypeStruct((ns_pad, args.din), jnp.float32),
+                    w=jax.ShapeDtypeStruct((1, args.din, h_dim * dh), jnp.float32),
+                    b=jax.ShapeDtypeStruct((1, h_dim * dh), jnp.float32),
+                    a_src=jax.ShapeDtypeStruct((g, h_dim, dh), jnp.float32),
+                    a_dst=jax.ShapeDtypeStruct((g, h_dim, dh), jnp.float32),
+                    wsel=jax.ShapeDtypeStruct((g,), jnp.int32),
+                )
+                x_sh = NamedSharding(mesh, rules.spec((None, "act_feat")))
+                fp_sh = FusedFPInputs(x=x_sh, w=rep, b=rep, a_src=rep, a_dst=rep, wsel=rep)
+                lowered = jax.jit(
+                    lane_step_fp,
+                    in_shardings=(plan_sh, fp_sh, rep, rep),
+                ).lower(plan, fp_abs, w_g, q)
+            else:
+                lowered = jax.jit(
+                    lane_step,
+                    in_shardings=(plan_sh, rep, rep, feat_sh, rep, rep),
+                ).lower(plan, th_s, th_d, h_src, w_g, q)
+        try:
+            compiled = lowered.compile()
+        except Exception as e:
+            if args.na_backend in ("kernel", "fused_fp") and jax.default_backend() != "tpu":
+                raise SystemExit(
+                    f"--na-backend {args.na_backend} needs a TPU to compile the "
+                    f"Pallas kernel (host backend: {jax.default_backend()}); "
+                    f"use --na-backend {args.na_backend}_interpret to validate "
+                    f"on this host.  Compile error: {e}"
+                ) from e
+            raise
     mem = compiled.memory_analysis()
     stats = analyze(compiled.as_text())
     edges_equiv = lanes * units * args.width * block * block  # masked-dense positions

@@ -10,12 +10,20 @@ measured FP-stage compute reduction (the serving-tier counterpart of the
 paper's Fig. 15 DRAM-fetch reduction).  ``--na-backend multigraph`` is
 the TPU path (one fused Pallas launch per step); ``multigraph_interpret``
 validates the same kernel on CPU; ``block`` is the pure-jnp fallback.
+``--na-backend fused-fp`` runs the stage-fusion megakernel: on a cache
+miss the target type's FP happens inside the NA launch (DESIGN.md §10);
+on a full-table cache hit the engine dispatches the projected multigraph
+path instead.  Compiled Pallas backends degrade to their interpret
+variants on CPU-only hosts.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
+
+import jax
 
 from ..core.fusion import NABackend
 from ..graphs import dataset_metapaths, dataset_target, synthetic_hetgraph
@@ -26,7 +34,30 @@ _BACKENDS = {
     "block": NABackend.BLOCK,
     "multigraph": NABackend.MULTIGRAPH,
     "multigraph_interpret": NABackend.MULTIGRAPH_INTERPRET,
+    "fused_fp": NABackend.FUSED_FP,
+    "fused-fp": NABackend.FUSED_FP,  # alias
+    "fused_fp_interpret": NABackend.FUSED_FP_INTERPRET,
 }
+
+# Compiled Pallas backends need a TPU; on CPU hosts fall back to the
+# interpreter (same kernel, same numbers) instead of crashing.
+_CPU_FALLBACK = {
+    NABackend.MULTIGRAPH: NABackend.MULTIGRAPH_INTERPRET,
+    NABackend.FUSED_FP: NABackend.FUSED_FP_INTERPRET,
+}
+
+
+def _resolve_backend(name: str) -> NABackend:
+    backend = _BACKENDS[name]
+    if backend in _CPU_FALLBACK and jax.default_backend() == "cpu":
+        fallback = _CPU_FALLBACK[backend]
+        print(
+            f"note: --na-backend {name} needs a TPU; falling back to "
+            f"{fallback.value} on {jax.default_backend()}",
+            file=sys.stderr,
+        )
+        return fallback
+    return backend
 
 
 def _target_metapaths(name: str, target: str) -> list[tuple[str, ...]]:
@@ -44,7 +75,7 @@ def serve_mix(graph, target, clusters, args, admission) -> dict:
         cache_block_rows=args.cache_block_rows,
         cache_policy=args.policy,
         admission=admission,
-        backend=_BACKENDS[args.na_backend],
+        backend=_resolve_backend(args.na_backend),
         block=args.block,
         max_edges=args.max_edges,
     )

@@ -15,7 +15,9 @@ import jax.numpy as jnp
 
 from ...core import stages
 from ...core.fusion import (
+    _FUSED_FP_BACKENDS,
     _MULTIGRAPH_BACKENDS,
+    FusedFPInputs,
     NABackend,
     neighbor_aggregate,
     neighbor_aggregate_multi,
@@ -53,13 +55,36 @@ def _han_embed(params, data: HGNNData, backend: NABackend):
     """FP -> per-graph (theta, NA, LSF) -> GSF.  Pure (fusable)."""
     x = data.features[data.target_type]
     heads = params["a_src"].shape[1]
-    h = stages.feature_projection(x, params["w_fp"], params["b_fp"])
-    h = shard(h, "act_vertex", "act_feat")  # projected-once FP output (RAB)
     n = x.shape[0]
-    hh = h.reshape(n, heads, -1)
 
     z_list, w_list = [], []
     valid_dst = jnp.ones((n,), bool)
+    if backend in _FUSED_FP_BACKENDS:
+        # Megakernel path (DESIGN.md §10): FP happens INSIDE the NA launch
+        # — raw x streams through the fused kernel, h' never materializes
+        # in HBM.  One forward (and, training, one backward) launch for
+        # the whole layer.
+        fp = FusedFPInputs.shared(
+            x, params["w_fp"], params["b_fp"], params["a_src"], params["a_dst"]
+        )
+        z_all = neighbor_aggregate_multi(
+            data.graphs, None, None, None, backend=backend, fp=fp
+        )  # [G, N, H, Dh]
+        for i in range(len(data.graphs)):
+            z = jax.nn.elu(z_all[i].reshape(n, -1))
+            z = shard(z, "act_vertex", "act_feat")
+            w_p = stages.local_semantic_fusion(
+                z, params["w_g"], params["b_g"], params["q"], valid_dst
+            )
+            z_list.append(z)
+            w_list.append(w_p)
+        fused, beta = stages.global_semantic_fusion(jnp.stack(w_list), jnp.stack(z_list))
+        return shard(fused, "act_vertex", "act_feat"), beta
+
+    h = stages.feature_projection(x, params["w_fp"], params["b_fp"])
+    h = shard(h, "act_vertex", "act_feat")  # projected-once FP output (RAB)
+    hh = h.reshape(n, heads, -1)
+
     if backend in _MULTIGRAPH_BACKENDS:
         # Consolidated path: all relations' theta in one einsum, all
         # relations' NA in ONE fused multigraph launch (fwd and bwd).

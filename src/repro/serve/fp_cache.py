@@ -111,6 +111,24 @@ class FPCache:
     def version(self, vtype: str) -> int:
         return self._version.get(vtype, 0)
 
+    def table_coverage(self, vtype: str, num_rows: int) -> float:
+        """Fraction of ``vtype``'s projected table (``num_rows`` rows)
+        resident at the current version.  The serving engine's fused-FP
+        path uses this for its bound-aware dispatch: coverage 1.0 means
+        the projected table is already paid for, so running the FP stage
+        again inside the megakernel would only waste FLOPs."""
+        ver = self.version(vtype)
+        br = self.block_rows
+        n_blocks = (num_rows + br - 1) // br
+        if n_blocks == 0:
+            return 1.0
+        resident = sum(
+            min(br, num_rows - bi * br)
+            for bi in range(n_blocks)
+            if (vtype, bi, ver) in self._blocks
+        )
+        return resident / num_rows
+
     # -- coherence ----------------------------------------------------------
 
     def invalidate(self, vtype: str) -> None:

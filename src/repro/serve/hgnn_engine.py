@@ -41,7 +41,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import stages
-from ..core.fusion import NABackend, SemanticGraphBatch, batch_semantic_graph, neighbor_aggregate_multi
+from ..core.fusion import (
+    _FUSED_FP_BACKENDS,
+    _FUSED_TO_MULTIGRAPH,
+    FusedFPInputs,
+    NABackend,
+    SemanticGraphBatch,
+    batch_semantic_graph,
+    neighbor_aggregate_multi,
+)
 from ..core.reuse import FPTraffic
 from ..core.scheduling import shortest_hamilton_path, similarity_matrix
 from ..graphs.hetgraph import HetGraph
@@ -131,6 +139,8 @@ class HGNNEngine:
         self.steps_run = 0
         self.na_launches = 0
         self.fp_rows_naive = 0  # rows a recompute-per-request FP stage would project
+        self.fused_steps = 0           # steps served by the FP+NA megakernel
+        self.fused_cache_bypasses = 0  # fused steps downgraded: table already cached
 
     # -- parameters ---------------------------------------------------------
 
@@ -234,13 +244,19 @@ class HGNNEngine:
 
     # -- execution ----------------------------------------------------------
 
-    def _fp_tables(self, active: list[tuple[int, GraphRequest]]) -> dict[str, jnp.ndarray]:
+    def _fp_tables(
+        self, active: list[tuple[int, GraphRequest]], skip: set[str] = frozenset()
+    ) -> dict[str, jnp.ndarray]:
+        """Projected tables for the step's metapath types via the cache.
+        ``skip`` types still count toward the naive-FP baseline but are
+        neither projected nor admitted — the fused path projects the
+        target type inside the NA launch instead."""
         tables: dict[str, jnp.ndarray] = {}
         for _, req in active:
             mp = req.metapaths[req._progress]
             for t in dict.fromkeys(mp):
                 self.fp_rows_naive += self.graph.num_vertices(t)
-                if t not in tables:
+                if t not in tables and t not in skip:
                     tables[t] = self.cache.project(
                         t, self.features[t], self.params["w_fp"][t], self.params["b_fp"][t]
                     )
@@ -254,20 +270,53 @@ class HGNNEngine:
         if not active:
             return 0
 
-        tables = self._fp_tables(active)
-        hh = tables[self.target_type].reshape(self.n_target, self.heads, self.hidden)
+        # Bound-aware dispatch for the fused-FP backend: if the cache
+        # already holds the target type's whole projected table, FP is a
+        # sunk cost — take the projected (multigraph) path and serve the
+        # hit.  On a miss, the megakernel projects raw features on-chip
+        # and h' never round-trips through HBM (nothing is admitted).
+        backend = self.backend
+        fused = backend in _FUSED_FP_BACKENDS
+        if fused and self.cache.table_coverage(self.target_type, self.n_target) >= 1.0:
+            backend = _FUSED_TO_MULTIGRAPH[backend]
+            fused = False
+            self.fused_cache_bypasses += 1
 
-        batches, th_s, th_d = [], [], []
-        for _, req in active:
-            mp = req.metapaths[req._progress]
-            a_src, a_dst = self._metapath_params(mp)
-            ts, td = stages.attention_coefficients(hh, a_src, a_dst)
-            batches.append(self._batch(mp))
-            th_s.append(ts)
-            th_d.append(td)
-        z_all = neighbor_aggregate_multi(
-            batches, jnp.stack(th_s), jnp.stack(th_d), hh, backend=self.backend
-        )  # [G_active, N, H, Dh]
+        if fused:
+            self._fp_tables(active, skip={self.target_type})
+            batches, a_s, a_d = [], [], []
+            for _, req in active:
+                mp = req.metapaths[req._progress]
+                a_src, a_dst = self._metapath_params(mp)
+                batches.append(self._batch(mp))
+                a_s.append(a_src)
+                a_d.append(a_dst)
+            fp = FusedFPInputs.shared(
+                self.features[self.target_type],
+                self.params["w_fp"][self.target_type],
+                self.params["b_fp"][self.target_type],
+                jnp.stack(a_s),
+                jnp.stack(a_d),
+            )
+            z_all = neighbor_aggregate_multi(
+                batches, None, None, None, backend=backend, fp=fp
+            )  # [G_active, N, H, Dh]
+            self.fused_steps += 1
+        else:
+            tables = self._fp_tables(active)
+            hh = tables[self.target_type].reshape(self.n_target, self.heads, self.hidden)
+
+            batches, th_s, th_d = [], [], []
+            for _, req in active:
+                mp = req.metapaths[req._progress]
+                a_src, a_dst = self._metapath_params(mp)
+                ts, td = stages.attention_coefficients(hh, a_src, a_dst)
+                batches.append(self._batch(mp))
+                th_s.append(ts)
+                th_d.append(td)
+            z_all = neighbor_aggregate_multi(
+                batches, jnp.stack(th_s), jnp.stack(th_d), hh, backend=backend
+            )  # [G_active, N, H, Dh]
         self.na_launches += 1
 
         valid = jnp.ones((self.n_target,), bool)
@@ -333,6 +382,8 @@ class HGNNEngine:
             fp_rows_reused=st.rows_reused,
             fp_rows_naive=self.fp_rows_naive,
             fp_compute_reduction=self.fp_rows_naive / max(st.rows_computed, 1),
+            fused_steps=self.fused_steps,
+            fused_cache_bypasses=self.fused_cache_bypasses,
             cache_resident_bytes=self.cache.resident_bytes,
             cache_capacity_bytes=self.cache.capacity_bytes,
         )
