@@ -6,6 +6,10 @@ speedup model is the paper's own: lanes execute in parallel, a round
 finishes when its most-loaded lane finishes — speedup(L) =
 total_edges / max_lane_load(L).  Measured wall time of the multilane
 program is reported alongside as a correctness/overhead check.
+
+``sweep_mesh_split`` is the lane-vs-model autotune for the training
+launcher: for a fixed device budget it models every L×M factorization
+and reports the collective-vs-compute crossover per dataset.
 """
 from __future__ import annotations
 
@@ -18,6 +22,90 @@ from repro.core.multilane import build_multilane_plan, multilane_na
 from repro.graphs import build_semantic_graphs, dataset_metapaths, synthetic_hetgraph
 
 from .common import timeit
+
+# Per-device constants for the analytic step model (order-of-magnitude TPU
+# ratios; only the flops/byte RATIO moves the crossover, not the scale).
+_FLOPS = 1e11      # attainable flop/s per device on the NA inner loops
+_ICI_BW = 1e10     # interconnect byte/s per link (ring collectives)
+_FLOP_PER_EDGE = 8  # mul+add over (H, Dh) handled separately below
+
+
+def _splits(devices: int):
+    return [(l, devices // l) for l in range(1, devices + 1) if devices % l == 0]
+
+
+def sweep_mesh_split(
+    report,
+    *,
+    datasets=("acm", "imdb", "dblp"),
+    devices: int = 8,
+    block: int = 128,
+    heads: int = 8,
+    head_dim: int = 64,
+    d_in: int = 128,
+    scale: float = 0.3,
+    max_edges: int = 1_500_000,
+    prefix: str = "lanes/autotune",
+):
+    """Model every lane×model split of a device budget per dataset.
+
+    Step cost per device, mirroring what ``launch.hgnn_train`` actually
+    shards (``multilane_na_sharded`` shards NA over the lane axis ONLY;
+    the model axis shards the dense FP/SF einsum dims):
+
+    * NA compute — the most-loaded lane's edge work under the
+      workload-aware balanced plan (NOT divided by M: NA replicates
+      across the model axis);
+    * FP compute — the dense projection flops, divided by M;
+    * collectives — the lane psum of the NA output (ring all-reduce,
+      ``2(L-1)/L`` × bytes) plus the model-axis activation collective
+      (``2(M-1)/M`` × bytes of the FP output).
+
+    The crossover is per dataset: low-degree semantic graphs (acm, imdb
+    metapaths) are collective-dominated — lanes buy little edge work but
+    pay the full psum, so the model split wins — while dense metapath
+    graphs (dblp's APCPA, avg degree ~66 at this scale) are
+    compute-dominated and the lane split wins.  Emits one row per split
+    and a ``.../best`` row; returns {dataset: (L, M)}.
+    """
+    best = {}
+    for ds in datasets:
+        g = synthetic_hetgraph(ds, scale=scale, feat_scale=0.1, seed=0)
+        sgs = build_semantic_graphs(g, dataset_metapaths(ds), max_edges=max_edges)
+        batches = [batch_semantic_graph(s, block=block) for s in sgs]
+        G = len(batches)
+        n_pad = batches[0].num_dst_pad
+        out_bytes = G * n_pad * heads * head_dim * 4      # psum'd NA output
+        act_bytes = n_pad * heads * head_dim * 4          # FP output h'
+        fp_flops = n_pad * d_in * heads * head_dim * 2
+        flop_per_edge = _FLOP_PER_EDGE * heads * head_dim
+
+        costs = {}
+        for lanes, msplit in _splits(devices):
+            plan = build_multilane_plan(batches, lanes, balanced=True)
+            max_load = int(plan.lane_plan.lane_load.max())
+            na_us = max_load * flop_per_edge / _FLOPS * 1e6
+            fp_us = fp_flops / (msplit * _FLOPS) * 1e6
+            lane_comm_us = 2 * (lanes - 1) / lanes * out_bytes / _ICI_BW * 1e6
+            model_comm_us = 2 * (msplit - 1) / msplit * act_bytes / _ICI_BW * 1e6
+            total_us = na_us + fp_us + lane_comm_us + model_comm_us
+            costs[(lanes, msplit)] = total_us
+            report(
+                f"{prefix}/{ds}/L{lanes}xM{msplit}",
+                total_us,
+                f"na={na_us:.1f}us fp={fp_us:.1f}us "
+                f"lane_comm={lane_comm_us:.1f}us model_comm={model_comm_us:.1f}us "
+                f"imbalance={plan.lane_plan.imbalance():.2f}",
+            )
+        pick = min(costs, key=costs.get)
+        best[ds] = pick
+        report(
+            f"{prefix}/{ds}/best",
+            costs[pick],
+            f"split=L{pick[0]}xM{pick[1]} devices={devices} "
+            f"avg_deg={sum(b.num_edges for b in batches) / (G * n_pad):.1f}",
+        )
+    return best
 
 
 def run(report):
@@ -48,3 +136,5 @@ def run(report):
                 t,
                 f"modeled_speedup={speedup:.2f} imbalance={plan.lane_plan.imbalance():.2f}",
             )
+
+    sweep_mesh_split(report)

@@ -12,6 +12,9 @@ Prints ``name,us_per_call,derived[,backend=...]`` CSV rows:
                        similarity vs FIFO admission (measured Fig. 15)
   stage_fusion/*     — FP+NA stage-fusion megakernel vs materialize-
                        then-NA vs staged reference (Alg. 2, DESIGN.md §10)
+  hgnn_train/*       — mesh-scale training launcher: measured step time +
+                       loss trajectory, plus the lane-vs-model mesh-split
+                       autotune sweep (collective-vs-compute crossover)
   roofline/*         — §Roofline terms per (arch × shape × mesh), from
                        the dry-run artifacts (run launch/dryrun first)
 
@@ -43,6 +46,7 @@ def main() -> None:
         breakdown,
         fp_cache,
         fusion_ablation,
+        hgnn_train,
         kernels_bench,
         lanes,
         multilane_bench,
@@ -61,6 +65,7 @@ def main() -> None:
         "multilane": multilane_bench.run,
         "fp_cache": fp_cache.run,
         "stage_fusion": stage_fusion.run,
+        "hgnn_train": hgnn_train.run,
         "stage_roofline": stage_roofline.run,
         "roofline": roofline.run,
     }

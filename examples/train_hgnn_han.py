@@ -3,80 +3,51 @@ steps on synthetic ACM with checkpoint/resume.
 
     PYTHONPATH=src python examples/train_hgnn_han.py [--steps 300]
 
-The model is widened (hidden 128 × 8 heads, att_dim 256, full-scale ACM
+A thin veneer over the mesh-scale launcher (``repro.launch.hgnn_train``):
+the model is widened (hidden 128 × 8 heads, att_dim 256, full-scale ACM
 features) to ~100M parameters, trained full-batch (transductive node
-classification, as HAN trains) with the fused pipeline.
+classification, as HAN trains) through the consolidated multilane NA path
+with the fault-tolerant train_loop — atomic checkpoints, counter-based
+data state, elastic lane restarts.  Add ``--lanes 2`` (or set
+``XLA_FLAGS=--xla_force_host_platform_device_count=4``) to shard the NA
+work units over a lane mesh; the loss trajectory does not change.
 """
 import argparse
-import os
-import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
-from repro.core import NABackend, similarity_schedule
-from repro.graphs import (
-    build_semantic_graphs,
-    dataset_metapaths,
-    dataset_target,
-    synthetic_hetgraph,
-    synthetic_labels,
-)
-from repro.models.hgnn import MODELS, cross_entropy, prepare_data
-from repro.models.hgnn.han import init_han
-from repro.optim import AdamWConfig, apply_updates, init_opt_state
+from repro.launch.hgnn_train import run_training
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--scale", type=float, default=0.5)
+    ap.add_argument("--lanes", type=int, default=1)
+    ap.add_argument(
+        "--backend", default="kernel",
+        choices=("reference", "kernel", "kernel_interpret"),
+    )
     ap.add_argument("--ckpt", default="artifacts/han_ckpt")
     args = ap.parse_args()
 
-    g = synthetic_hetgraph("acm", scale=args.scale, feat_scale=1.0, seed=0)
-    target, ncls = dataset_target("acm")
-    labels = synthetic_labels(g, "acm")
-    sgs = build_semantic_graphs(g, dataset_metapaths("acm"), max_edges=400_000)
-    order, _ = similarity_schedule(sgs, g.vertex_counts)
-    data = prepare_data(g, [sgs[i] for i in order], target, ncls, labels, with_blocks=False)
-
-    model = MODELS["HAN"]
-    params = init_han(jax.random.key(0), data, hidden=128, heads=8, att_dim=256)
-    n_params = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
-    print(f"HAN params: {n_params/1e6:.1f}M  edges: {sum(s.num_edges for s in sgs)}")
-
-    opt = AdamWConfig(lr=5e-3, weight_decay=0.0)
-    ostate = init_opt_state(params, opt)
-    start = 0
-    last = latest_step(args.ckpt)
-    if last is not None:
-        state, _ = restore_checkpoint(args.ckpt, last, {"params": params, "opt": ostate})
-        params, ostate = state["params"], state["opt"]
-        start = last
-        print(f"resumed from step {last}")
-
-    @jax.jit
-    def step(p, s):
-        loss, grads = jax.value_and_grad(
-            lambda p_: cross_entropy(model.forward(p_, data, backend=NABackend.SEGMENT), data.labels)
-        )(p)
-        p, s, _ = apply_updates(p, grads, s, opt, jnp.asarray(5e-3))
-        return p, s, loss
-
-    t0 = time.time()
-    for i in range(start, args.steps):
-        params, ostate, loss = step(params, ostate)
-        if i % 20 == 0:
-            logits = model.forward(params, data)
-            acc = float((jnp.argmax(logits, -1) == data.labels).mean())
-            print(f"step {i:4d}  loss {float(loss):.4f}  acc {acc:.3f}  ({time.time()-t0:.1f}s)")
-        if (i + 1) % 100 == 0:
-            save_checkpoint(args.ckpt, i + 1, {"params": params, "opt": ostate})
-    save_checkpoint(args.ckpt, args.steps, {"params": params, "opt": ostate})
-    print("training complete")
+    state, history, meta = run_training(
+        dataset="acm",
+        model_name="HAN",
+        steps=args.steps,
+        lanes=args.lanes,
+        backend=args.backend,
+        hidden=128,
+        heads=8,
+        scale=args.scale,
+        feat_scale=1.0,
+        ckpt_dir=args.ckpt,
+        ckpt_every=100,
+        log_every=20,
+    )
+    print(
+        f"training complete: loss {history[0]['loss']:.4f} -> "
+        f"{history[-1]['loss']:.4f}  acc {history[-1]['acc']:.3f}  "
+        f"({meta['n_params']/1e6:.1f}M params, backend={meta['backend']})"
+    )
 
 
 if __name__ == "__main__":

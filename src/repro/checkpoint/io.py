@@ -70,8 +70,17 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, like) -> tuple[object, dict]:
-    """Restore into the structure of ``like`` (a pytree of arrays/None)."""
+def restore_checkpoint(
+    ckpt_dir: str, step: int, like, *, shardings=None
+) -> tuple[object, dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays/None).
+
+    With ``shardings`` (a matching pytree of ``jax.sharding.Sharding``),
+    leaves are placed straight onto the target mesh as they load — the
+    elastic-restart path: the saved leaves are *logical* arrays, so the
+    mesh they land on is free to differ from the mesh that wrote them
+    (more lanes, fewer lanes, different model split).
+    """
     path = os.path.join(ckpt_dir, f"step_{step}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
@@ -86,11 +95,37 @@ def restore_checkpoint(ckpt_dir: str, step: int, like) -> tuple[object, dict]:
         arr = np.load(os.path.join(path, leaf["file"]))
         out.append(arr)
     state = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        state = reshard_to(state, shardings)
     return state, manifest["aux"]
 
 
-def reshard_to(state, shardings):
-    """Elastic restart: place a (host) state onto a new mesh layout."""
+def reshard_to(state, shardings=None, *, mesh=None, rules=None, axes=None):
+    """Elastic restart: place a (host) state onto a new mesh layout.
+
+    Two forms:
+
+    * ``reshard_to(state, shardings)`` — explicit pytree of Shardings;
+    * ``reshard_to(state, mesh=..., rules=..., axes=...)`` — derive the
+      shardings from logical axes via ``dist.param_shardings``.  This is
+      the lane-elastic form (paper §4.2.1: hardware added between runs):
+      the same logical-axes tree resolves against whatever lane-mesh
+      geometry the new run has, so a run checkpointed on an L-lane mesh
+      restores onto an L′-lane mesh without a conversion step.  Params
+      are lane-replicated under the "lanes" rules and the multilane plan
+      is rebuilt per run, so the restored bits are identical for any L′
+      and the continued trajectory is bitwise reproducible per topology
+      (cross-topology gradients agree to f32 tolerance — the lane
+      partition groups the cross-unit grad reduction;
+      tests/test_hgnn_train pins both).
+    """
+    if shardings is None:
+        assert mesh is not None and rules is not None and axes is not None, (
+            "reshard_to needs either explicit shardings or a (mesh, rules, axes) triple"
+        )
+        from ..dist.sharding import param_shardings
+
+        shardings = param_shardings(mesh, rules, axes)
     return jax.tree_util.tree_map(
         lambda x, s: x if x is None else jax.device_put(x, s), state, shardings
     )

@@ -8,6 +8,7 @@ from .fusion import (
     SemanticGraphBatch,
     batch_semantic_graph,
     build_unit_tables,
+    cpu_fallback,
     mean_aggregate,
     neighbor_aggregate,
     neighbor_aggregate_multi,
@@ -30,6 +31,7 @@ __all__ = [
     "SemanticGraphBatch",
     "batch_semantic_graph",
     "build_unit_tables",
+    "cpu_fallback",
     "mean_aggregate",
     "neighbor_aggregate",
     "neighbor_aggregate_multi",

@@ -61,6 +61,27 @@ _FUSED_TO_MULTIGRAPH = {
     NABackend.FUSED_FP_INTERPRET: NABackend.MULTIGRAPH_INTERPRET,
 }
 
+# Compiled Pallas backends need a TPU; each maps to the interpreter variant
+# of the SAME kernel body (same numbers) for CPU-only hosts.
+_CPU_FALLBACK = {
+    NABackend.KERNEL: NABackend.KERNEL_INTERPRET,
+    NABackend.MULTIGRAPH: NABackend.MULTIGRAPH_INTERPRET,
+    NABackend.FUSED_FP: NABackend.FUSED_FP_INTERPRET,
+}
+
+
+def cpu_fallback(backend: NABackend) -> NABackend:
+    """Degrade a compiled Pallas backend to its interpret twin on CPU hosts.
+
+    The launchers (serve, train) and tests all need the same policy: ask
+    for the TPU kernel, validate the identical kernel body under the
+    interpreter when no TPU is attached.  No-op for non-kernel backends
+    and on TPU hosts.
+    """
+    if backend in _CPU_FALLBACK and jax.default_backend() == "cpu":
+        return _CPU_FALLBACK[backend]
+    return backend
+
 
 @dataclasses.dataclass
 class SemanticGraphBatch:

@@ -183,6 +183,18 @@ def _unit_na(
 
 MULTILANE_BACKENDS = ("reference", "kernel", "kernel_interpret", "fused_fp", "fused_fp_interpret")
 
+# string-backend twin of fusion.cpu_fallback: compiled Pallas lowering
+# needs a TPU; the interpreter runs the identical kernel body on CPU.
+_CPU_BACKEND_FALLBACK = {"kernel": "kernel_interpret", "fused_fp": "fused_fp_interpret"}
+
+
+def resolve_multilane_backend(backend: str) -> str:
+    """Degrade a compiled multilane backend string to its interpret twin on
+    CPU-only hosts (same kernel, same numbers)."""
+    if backend in _CPU_BACKEND_FALLBACK and jax.default_backend() == "cpu":
+        return _CPU_BACKEND_FALLBACK[backend]
+    return backend
+
 
 def multilane_na(
     plan: MultiLanePlan,

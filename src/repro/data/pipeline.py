@@ -53,6 +53,45 @@ class SyntheticLMData:
         return batch
 
 
+@dataclasses.dataclass
+class SyntheticHGNNData:
+    """Counter-based labeled-vertex minibatch stream for transductive HGNN
+    training (HAN/R-GAT train full-graph forward, minibatch loss).
+
+    Same checkpoint contract as :class:`SyntheticLMData`: batch t is a pure
+    function of ``(seed, step)`` (threefry fold-in), so a crashed run that
+    restores ``state()`` from the checkpoint aux replays the exact vertex
+    stream — the HGNN trainer inherits the bitwise resume guarantee
+    (tests/test_hgnn_train).  ``batch_size >= num_vertices`` degenerates to
+    the full labeled set in a fixed order (full-batch transductive
+    training, still one batch per step so the loop shape is unchanged).
+    """
+
+    num_vertices: int
+    batch_size: int
+    seed: int = 0
+    step: int = 0
+
+    def __post_init__(self):
+        assert self.num_vertices > 0 and self.batch_size > 0
+
+    def state(self) -> dict:
+        return {"step": self.step, "seed": self.seed}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])
+        assert int(state["seed"]) == self.seed, "pipeline seed mismatch"
+
+    def next(self) -> dict:
+        key = jax.random.fold_in(jax.random.key(self.seed), self.step)
+        self.step += 1
+        if self.batch_size >= self.num_vertices:
+            idx = jnp.arange(self.num_vertices, dtype=jnp.int32)
+        else:
+            idx = jax.random.permutation(key, self.num_vertices)[: self.batch_size]
+        return {"idx": idx.astype(jnp.int32)}
+
+
 def hgnn_minibatches(num_vertices: int, batch_size: int, seed: int = 0):
     """Deterministic vertex-minibatch id stream for HGNN training."""
     rng = np.random.default_rng(seed)

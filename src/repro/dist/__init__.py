@@ -10,6 +10,7 @@ CPU smoke tests and 512-chip multi-pod dry-runs unchanged.
 from .sharding import (
     Rules,
     active_rules,
+    lane_axes,
     make_rules,
     param_shardings,
     shard,
@@ -19,6 +20,7 @@ from .sharding import (
 __all__ = [
     "Rules",
     "active_rules",
+    "lane_axes",
     "make_rules",
     "param_shardings",
     "shard",

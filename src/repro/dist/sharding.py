@@ -239,6 +239,21 @@ def _is_axes_leaf(a) -> bool:
     return isinstance(a, tuple) and all(isinstance(x, (str, type(None))) for x in a)
 
 
+def lane_axes(rules: Rules) -> tuple[str, ...]:
+    """The mesh axes backing the logical ``lane`` axis under ``rules``.
+
+    The multilane executors (``core.multilane.multilane_na_sharded``) and
+    the training launcher take the lane mesh axes as an argument; callers
+    must derive them from the active rules rather than hardcoding
+    ``("lane",)`` — under a multi-pod posture the lane dimension compounds
+    to ``("pod", "lane")`` and a hardcoded single axis would silently
+    leave the pod axis unsharded.
+    """
+    axes = rules.mesh_axes("lane")
+    assert axes, f"rules {rules.name!r} do not map a lane axis"
+    return axes
+
+
 def param_shardings(mesh, rules: Rules, axes):
     """Map a logical-axes pytree to NamedShardings on ``mesh``.
 

@@ -25,7 +25,7 @@ import time
 
 import jax
 
-from ..core.fusion import NABackend
+from ..core.fusion import NABackend, cpu_fallback
 from ..graphs import dataset_metapaths, dataset_target, synthetic_hetgraph
 from ..serve.hgnn_engine import HGNNEngine, make_request_mix
 
@@ -39,25 +39,17 @@ _BACKENDS = {
     "fused_fp_interpret": NABackend.FUSED_FP_INTERPRET,
 }
 
-# Compiled Pallas backends need a TPU; on CPU hosts fall back to the
-# interpreter (same kernel, same numbers) instead of crashing.
-_CPU_FALLBACK = {
-    NABackend.MULTIGRAPH: NABackend.MULTIGRAPH_INTERPRET,
-    NABackend.FUSED_FP: NABackend.FUSED_FP_INTERPRET,
-}
-
 
 def _resolve_backend(name: str) -> NABackend:
     backend = _BACKENDS[name]
-    if backend in _CPU_FALLBACK and jax.default_backend() == "cpu":
-        fallback = _CPU_FALLBACK[backend]
+    resolved = cpu_fallback(backend)
+    if resolved is not backend:
         print(
             f"note: --na-backend {name} needs a TPU; falling back to "
-            f"{fallback.value} on {jax.default_backend()}",
+            f"{resolved.value} on {jax.default_backend()}",
             file=sys.stderr,
         )
-        return fallback
-    return backend
+    return resolved
 
 
 def _target_metapaths(name: str, target: str) -> list[tuple[str, ...]]:

@@ -19,9 +19,11 @@ from ...core.fusion import (
     _MULTIGRAPH_BACKENDS,
     FusedFPInputs,
     NABackend,
+    _pad_rows,
     neighbor_aggregate,
     neighbor_aggregate_multi,
 )
+from ...core.multilane import MultiLanePlan, multilane_na, multilane_na_sharded
 from ...dist.sharding import shard
 from .common import HGNNData, HGNNModel, glorot, split_keys
 
@@ -116,6 +118,87 @@ def _han_embed(params, data: HGNNData, backend: NABackend):
 
 def han_forward(params, data: HGNNData, *, backend: NABackend = NABackend.SEGMENT):
     fused, _ = _han_embed(params, data, backend)
+    return fused @ params["w_out"] + params["b_out"]
+
+
+def _han_embed_multilane(
+    params,
+    data: HGNNData,
+    plan: MultiLanePlan,
+    *,
+    mesh=None,
+    lane_axes: tuple[str, ...] = ("lane",),
+    backend: str = "reference",
+):
+    """The consolidated HAN layer over a lane-partitioned work-unit plan.
+
+    Same semantics as the MULTIGRAPH path of ``_han_embed`` — one theta
+    einsum for all relations, all NA units in one fused dispatch — but the
+    units execute through ``core.multilane``: vmapped lanes on one chip
+    (``mesh=None``) or ``shard_map``ped over the mesh's lane axis (paper
+    §4.2.1).  ``backend="kernel"`` runs one fused multigraph Pallas launch
+    per lane shard, forward AND backward (custom VJP) — the training path
+    of the mesh-scale launcher.
+
+    Equivalence contract (pinned by tests/test_multilane): the FORWARD is
+    bit-identical across lane counts and backends — units are (graph,
+    dst-block-row) disjoint, so lane assignment only moves exact zeros
+    through the scatter/psum.  The BACKWARD's cross-unit reduction
+    (d_h_src over all units sharing the src space) is grouped by lane,
+    so gradients agree to f32 tolerance (~1e-9) across lane counts and
+    are bit-deterministic for a fixed topology.
+    """
+    x = data.features[data.target_type]
+    heads = params["a_src"].shape[1]
+    n = x.shape[0]
+
+    h = stages.feature_projection(x, params["w_fp"], params["b_fp"])
+    h = shard(h, "act_vertex", "act_feat")  # projected-once FP output (RAB)
+    hh = h.reshape(n, heads, -1)
+
+    th_s = jnp.einsum("nhd,ghd->gnh", hh, params["a_src"])
+    th_d = jnp.einsum("nhd,ghd->gnh", hh, params["a_dst"])
+    n_pad = plan.n_dst_blocks * plan.block  # shared src/dst vertex space
+    th_s = _pad_rows(th_s.swapaxes(0, 1), n_pad).swapaxes(0, 1)
+    th_d = _pad_rows(th_d.swapaxes(0, 1), n_pad).swapaxes(0, 1)
+    hh_p = _pad_rows(hh, n_pad)
+
+    if mesh is None:
+        z_all = multilane_na(plan, th_s, th_d, hh_p, backend=backend)
+    else:
+        z_all = multilane_na_sharded(
+            plan, th_s, th_d, hh_p, mesh=mesh, lane_axes=lane_axes, backend=backend
+        )
+    z_all = z_all[:, :n]  # [G, N, H, Dh]
+
+    z_list, w_list = [], []
+    valid_dst = jnp.ones((n,), bool)
+    for i in range(len(data.graphs)):
+        z = jax.nn.elu(z_all[i].reshape(n, -1))
+        z = shard(z, "act_vertex", "act_feat")
+        w_p = stages.local_semantic_fusion(
+            z, params["w_g"], params["b_g"], params["q"], valid_dst
+        )
+        z_list.append(z)
+        w_list.append(w_p)
+    fused, beta = stages.global_semantic_fusion(jnp.stack(w_list), jnp.stack(z_list))
+    return shard(fused, "act_vertex", "act_feat"), beta
+
+
+def han_forward_multilane(
+    params,
+    data: HGNNData,
+    plan: MultiLanePlan,
+    *,
+    mesh=None,
+    lane_axes: tuple[str, ...] = ("lane",),
+    backend: str = "reference",
+):
+    """HAN logits with NA dispatched through a multi-lane plan (see
+    ``_han_embed_multilane``)."""
+    fused, _ = _han_embed_multilane(
+        params, data, plan, mesh=mesh, lane_axes=lane_axes, backend=backend
+    )
     return fused @ params["w_out"] + params["b_out"]
 
 

@@ -1,4 +1,20 @@
 from .step import TrainState, make_train_step, lm_loss, train_state_axes
 from .loop import train_loop
+from .hgnn import (
+    hgnn_param_axes,
+    hgnn_train_state_axes,
+    init_hgnn_train_state,
+    make_hgnn_train_step,
+)
 
-__all__ = ["TrainState", "make_train_step", "lm_loss", "train_state_axes", "train_loop"]
+__all__ = [
+    "TrainState",
+    "make_train_step",
+    "lm_loss",
+    "train_state_axes",
+    "train_loop",
+    "hgnn_param_axes",
+    "hgnn_train_state_axes",
+    "init_hgnn_train_state",
+    "make_hgnn_train_step",
+]

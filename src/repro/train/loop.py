@@ -33,12 +33,18 @@ def train_loop(
     crash_at: int | None = None,  # fault-injection hook for tests
     log_every: int = 10,
     log: Callable[[str], None] = print,
+    state_shardings=None,  # elastic restart: place restored leaves on THIS mesh
 ) -> tuple[TrainState, list[dict]]:
     start = 0
     if ckpt_dir and resume:
         last = latest_step(ckpt_dir)
         if last is not None:
-            state, aux = restore_checkpoint(ckpt_dir, last, state)
+            # state_shardings belongs to the CURRENT run's mesh, which may
+            # differ from the mesh that wrote the checkpoint (elastic lane
+            # restart) — the leaves on disk are logical arrays either way.
+            state, aux = restore_checkpoint(
+                ckpt_dir, last, state, shardings=state_shardings
+            )
             data.restore(aux["data"])
             start = last
             log(f"[resume] restored step {last}")

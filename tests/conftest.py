@@ -1,4 +1,4 @@
-"""Test bootstrap: gate optional third-party deps.
+"""Test bootstrap: gate optional third-party deps, force a device mesh.
 
 The container this suite runs in does not always ship `hypothesis`; the
 property tests only use a tiny slice of it (``given``/``settings`` +
@@ -6,6 +6,11 @@ integer/choice strategies), so a deterministic stand-in under
 ``tests/_compat`` fills in when the real package is absent.  When
 hypothesis IS installed it wins — the stub directory is only added to
 ``sys.path`` after a failed lookup.
+
+The multilane/elastic-restart tests need REAL multi-device lane meshes,
+so on CPU hosts the XLA host-platform device count is forced to 4 before
+jax initializes (a no-op if the user already set XLA_FLAGS; conftest runs
+before any test module imports jax).
 """
 import importlib.util
 import os
@@ -13,3 +18,8 @@ import sys
 
 if importlib.util.find_spec("hypothesis") is None:
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "_compat"))
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=4"
+    ).strip()

@@ -9,6 +9,7 @@ from jax.sharding import NamedSharding, PartitionSpec
 from repro.dist.sharding import (
     Rules,
     active_rules,
+    lane_axes,
     make_rules,
     param_shardings,
     shard,
@@ -54,6 +55,15 @@ def test_lanes_rules():
     assert rfs.spec(("act_batch", "embed")) == PartitionSpec(None, None)
     rmp = make_rules(parallelism="lanes", multi_pod=True)
     assert rmp.spec(("act_lane", None)) == PartitionSpec(("pod", "lane"), None)
+
+
+def test_lane_axes_helper():
+    """lane_axes derives the multilane shard axes from the rules — a
+    hardcoded ("lane",) would drop the pod axis under multi_pod."""
+    assert lane_axes(make_rules(parallelism="lanes")) == ("lane",)
+    assert lane_axes(make_rules(parallelism="lanes", multi_pod=True)) == ("pod", "lane")
+    with pytest.raises(AssertionError, match="lane axis"):
+        lane_axes(make_rules())  # tp posture maps no lane dimension
 
 
 def test_param_shardings_on_real_model_pytree():
