@@ -6,28 +6,55 @@ import time
 import jax
 
 
+def timeit_stats(
+    fn, *args, warmup: int = 2, iters: int = 5
+) -> tuple[float, float, float, int]:
+    """``(p10, p50, p90, iters)`` wall time in MICROSECONDS of fn(*args)
+    with block_until_ready.
+
+    Single-number medians hide run-to-run spread, which is exactly what
+    an observability PR needs to pin down — report rows carry the p10/p90
+    envelope alongside ``us_per_call`` so a regression is separable from
+    noise.  Percentiles use nearest-rank on the sorted sample (with the
+    default 5 iters: p10=min, p50=median, p90=max).
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+
+    def q(p: float) -> float:
+        # upper nearest-rank: q(0.5) == times[iters // 2], the exact
+        # median the pre-stats timeit() reported for every iter count
+        return times[min(iters - 1, int(p * (iters - 1) + 0.5))] * 1e6
+
+    return q(0.10), q(0.50), q(0.90), iters
+
+
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall time in MICROSECONDS of fn(*args) with block_until_ready.
 
     Returns µs so report rows (`us_per_call`) consume it directly —
     callers must not rescale.
     """
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return timeit_stats(fn, *args, warmup=warmup, iters=iters)[1]
 
 
-def row(name: str, us_per_call: float, derived: str, backend: str | None = None) -> str:
+def row(
+    name: str,
+    us_per_call: float,
+    derived: str,
+    backend: str | None = None,
+    stats: tuple[float, float, float, int] | None = None,
+) -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     if backend is not None:
         line += f",backend={backend}"
+    if stats is not None:
+        line += f",p10={stats[0]:.1f},p90={stats[2]:.1f}"
     print(line)
     return line

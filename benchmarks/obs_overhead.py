@@ -1,0 +1,114 @@
+"""Tracing/metrics layer overhead (DESIGN.md §12 budget).
+
+The observability contract is two-sided: with the tracer DISABLED the
+instrumented code paths must cost nothing measurable (trace_span's
+fast path is one global ``is None`` check), and with the tracer ENABLED
+(``sync=False`` bookkeeping mode) the per-span cost must disappear into
+any realistic step (budget: ≤2% of median step time).  This bench pins
+both sides on the eager instrumented NA path the serving engine uses —
+``neighbor_aggregate_multi`` with the BLOCK fallback, which opens one
+span per semantic graph per call — plus a raw span microbench.
+
+``sync=True`` rows are informational: blocking at every span boundary is
+the *honest-timing* mode and intentionally serializes dispatch, so it is
+excluded from the overhead budget.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import NABackend, batch_semantic_graph
+from repro.core.fusion import neighbor_aggregate_multi
+from repro.graphs import build_semantic_graphs, synthetic_hetgraph
+from repro.obs import disable_tracing, enable_tracing, trace_span
+
+from .common import timeit_stats
+
+_POOL = [
+    ("author", "paper", "author"),
+    ("author", "paper", "term", "paper", "author"),
+    ("author", "paper", "venue", "paper", "author"),
+]
+
+B, H, DH = 16, 2, 8
+# loose CI guard — the budget claim lives in BENCH_obs_overhead.json; the
+# assert only catches a broken fast path, not scheduler noise
+_MAX_TRACED_RATIO = 1.10
+
+
+def run(report):
+    g = synthetic_hetgraph("dblp", scale=0.12, feat_scale=0.1, seed=0)
+    sgs = build_semantic_graphs(g, _POOL, max_edges=60_000)
+    batches = [batch_semantic_graph(s, block=B) for s in sgs]
+    gn = len(batches)
+    ns, nd = batches[0].num_src, batches[0].num_dst
+    rng = np.random.default_rng(0)
+    hs = jnp.asarray(rng.standard_normal((ns, H, DH)).astype(np.float32))
+    ths = jnp.asarray(rng.standard_normal((gn, ns, H)).astype(np.float32))
+    thd = jnp.asarray(rng.standard_normal((gn, nd, H)).astype(np.float32))
+
+    def step():
+        # eager instrumented path: one na/<graph> span per semantic graph
+        return neighbor_aggregate_multi(
+            batches, ths, thd, hs, backend=NABackend.BLOCK
+        )
+
+    disable_tracing()
+    stats_off = timeit_stats(step, warmup=2, iters=9)
+    report(
+        "obs_overhead/step/untraced", stats_off[1],
+        f"graphs={gn} spans_per_step=0", stats=stats_off,
+    )
+
+    enable_tracing(sync=False)
+    try:
+        stats_on = timeit_stats(step, warmup=2, iters=9)
+    finally:
+        disable_tracing()
+    ratio = stats_on[1] / max(stats_off[1], 1e-9)
+    report(
+        "obs_overhead/step/traced", stats_on[1],
+        f"graphs={gn} spans_per_step={gn} overhead={ratio:.4f}x",
+        stats=stats_on,
+    )
+
+    enable_tracing(sync=True)
+    try:
+        stats_sync = timeit_stats(step, warmup=2, iters=9)
+    finally:
+        disable_tracing()
+    report(
+        "obs_overhead/step/traced_sync", stats_sync[1],
+        f"graphs={gn} honest-timing mode (serialized dispatch, "
+        f"excluded from the overhead budget)",
+        stats=stats_sync,
+    )
+
+    # raw span cost, both sides of the contract
+    def span_burst():
+        for _ in range(1000):
+            with trace_span("bench/span", stage="NA", k=1):
+                pass
+        return ()
+
+    stats_noop = timeit_stats(span_burst, warmup=1, iters=9)
+    report(
+        "obs_overhead/span_cost/disabled", stats_noop[1] / 1000,
+        "us per disabled trace_span enter/exit (1000-span burst)",
+    )
+    tracer = enable_tracing(sync=False)
+    try:
+        stats_live = timeit_stats(span_burst, warmup=1, iters=9)
+    finally:
+        disable_tracing()
+    report(
+        "obs_overhead/span_cost/enabled", stats_live[1] / 1000,
+        f"us per recorded span (1000-span burst, {len(tracer.events)} events kept)",
+    )
+
+    assert ratio <= _MAX_TRACED_RATIO, (
+        f"tracing-enabled step overhead {ratio:.3f}x exceeds the "
+        f"{_MAX_TRACED_RATIO}x guard — trace_span fast path regressed?"
+    )

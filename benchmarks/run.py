@@ -17,11 +17,16 @@ Prints ``name,us_per_call,derived[,backend=...]`` CSV rows:
                        autotune sweep (collective-vs-compute crossover)
   roofline/*         — §Roofline terms per (arch × shape × mesh), from
                        the dry-run artifacts (run launch/dryrun first)
+  obs_overhead/*     — tracing/metrics layer overhead: traced-off vs
+                       traced-on step time + raw span cost (DESIGN.md §12)
 
 ``--json`` additionally writes the rows as ``BENCH_<only>.json`` (or
 ``BENCH.json`` for a full run): a list of
 ``{name, us_per_call, backend, derived}`` records — the regression
-baseline later PRs compare against.
+baseline later PRs compare against.  Rows measured with ``timeit_stats``
+also carry ``p10_us/p50_us/p90_us/iters`` so spread is separable from
+regression.  ``--list`` prints the registered bench names; duplicate
+registrations abort the run.
 """
 from __future__ import annotations
 
@@ -33,15 +38,7 @@ import traceback
 from .common import row
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, help="comma-list of bench names")
-    ap.add_argument(
-        "--json", action="store_true",
-        help="write rows to BENCH_<only>.json (BENCH.json for a full run)",
-    )
-    args = ap.parse_args()
-
+def _registry() -> dict:
     from . import (
         breakdown,
         fp_cache,
@@ -50,36 +47,80 @@ def main() -> None:
         kernels_bench,
         lanes,
         multilane_bench,
+        obs_overhead,
         roofline,
         similarity,
         stage_fusion,
         stage_roofline,
     )
 
-    benches = {
-        "breakdown": breakdown.run,
-        "fusion": fusion_ablation.run,
-        "lanes": lanes.run,
-        "similarity": similarity.run,
-        "kernels": kernels_bench.run,
-        "multilane": multilane_bench.run,
-        "fp_cache": fp_cache.run,
-        "stage_fusion": stage_fusion.run,
-        "hgnn_train": hgnn_train.run,
-        "stage_roofline": stage_roofline.run,
-        "roofline": roofline.run,
-    }
+    benches: dict = {}
+
+    def register(name: str, fn) -> None:
+        # fail LOUDLY: a silent overwrite would drop a whole bench family
+        # from the regression baseline without any signal in CI
+        if name in benches:
+            raise SystemExit(f"duplicate benchmark registration: {name!r}")
+        benches[name] = fn
+
+    register("breakdown", breakdown.run)
+    register("fusion", fusion_ablation.run)
+    register("lanes", lanes.run)
+    register("similarity", similarity.run)
+    register("kernels", kernels_bench.run)
+    register("multilane", multilane_bench.run)
+    register("fp_cache", fp_cache.run)
+    register("stage_fusion", stage_fusion.run)
+    register("hgnn_train", hgnn_train.run)
+    register("stage_roofline", stage_roofline.run)
+    register("roofline", roofline.run)
+    register("obs_overhead", obs_overhead.run)
+    return benches
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-list of bench names")
+    ap.add_argument(
+        "--json", action="store_true",
+        help="write rows to BENCH_<only>.json (BENCH.json for a full run)",
+    )
+    ap.add_argument(
+        "--list", action="store_true", help="list registered benches and exit"
+    )
+    args = ap.parse_args()
+
+    benches = _registry()
+    if args.list:
+        for name in benches:
+            print(name)
+        return
     if args.only:
         keep = set(args.only.split(","))
+        unknown = keep - set(benches)
+        if unknown:
+            raise SystemExit(f"unknown benches: {sorted(unknown)} (see --list)")
         benches = {k: v for k, v in benches.items() if k in keep}
 
     records: list[dict] = []
 
-    def report(name: str, us_per_call: float, derived: str, backend: str | None = None):
-        records.append(dict(
+    def report(
+        name: str,
+        us_per_call: float,
+        derived: str,
+        backend: str | None = None,
+        stats: tuple[float, float, float, int] | None = None,
+    ):
+        rec = dict(
             name=name, us_per_call=float(us_per_call), backend=backend, derived=derived,
-        ))
-        return row(name, us_per_call, derived, backend=backend)
+        )
+        if stats is not None:
+            rec.update(
+                p10_us=float(stats[0]), p50_us=float(stats[1]),
+                p90_us=float(stats[2]), iters=int(stats[3]),
+            )
+        records.append(rec)
+        return row(name, us_per_call, derived, backend=backend, stats=stats)
 
     failures = 0
     for name, fn in benches.items():

@@ -19,7 +19,8 @@ from ..core.multilane import MultiLanePlan, multilane_na, multilane_na_sharded
 from ..core.scheduling import LanePlan
 from ..core import stages
 from ..dist.sharding import make_rules, use_rules
-from .hlostats import analyze
+from ..obs import disable_tracing, enable_tracing, trace_span
+from .hlostats import analyze, span_attrs
 from .mesh import make_lane_mesh
 
 PEAK_FLOPS = 197e12
@@ -108,7 +109,14 @@ def main():
         help="fused_fp backends only: raw feature width streamed into the megakernel",
     )
     ap.add_argument("--out", default="artifacts/dryrun/hgnn_multilane.json")
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="write a Chrome-trace JSON of the dry-run (lower/compile spans; "
+             "the compiled program's span carries hlostats collective-bytes "
+             "and dot-FLOP attributes)",
+    )
     args = ap.parse_args()
+    tracer = enable_tracing(sync=True) if args.trace else None
     if args.schedule == "aligned" and args.executor != "spmd":
         ap.error("--executor shard_map only applies to --schedule balanced")
     if args.schedule == "aligned" and args.na_backend != "reference":
@@ -214,7 +222,11 @@ def main():
                     in_shardings=(plan_sh, rep, rep, feat_sh, rep, rep),
                 ).lower(plan, th_s, th_d, h_src, w_g, q)
         try:
-            compiled = lowered.compile()
+            with trace_span(
+                "dryrun/compile", stage="compile", schedule=args.schedule,
+                executor=args.executor, backend=args.na_backend, lanes=lanes,
+            ):
+                compiled = lowered.compile()
         except Exception as e:
             if args.na_backend in ("kernel", "fused_fp") and jax.default_backend() != "tpu":
                 raise SystemExit(
@@ -225,7 +237,11 @@ def main():
                 ) from e
             raise
     mem = compiled.memory_analysis()
-    stats = analyze(compiled.as_text())
+    with trace_span("dryrun/hlostats", stage="analyze") as sp:
+        stats = analyze(compiled.as_text())
+        # the compiled program's communication/compute footprint rides on
+        # its span in the exported timeline
+        sp.annotate(**span_attrs(stats, schedule=args.schedule))
     edges_equiv = lanes * units * args.width * block * block  # masked-dense positions
     flops = stats.dot_flops
     result = dict(
@@ -246,6 +262,10 @@ def main():
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     print(json.dumps(result, indent=1))
+    if tracer is not None:
+        tracer.export_chrome_trace(args.trace)
+        disable_tracing()
+        print(f"wrote {args.trace}")
 
 
 if __name__ == "__main__":

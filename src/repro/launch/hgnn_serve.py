@@ -27,6 +27,7 @@ import jax
 
 from ..core.fusion import NABackend, cpu_fallback
 from ..graphs import dataset_metapaths, dataset_target, synthetic_hetgraph
+from ..obs import MetricsRegistry, disable_tracing, enable_tracing
 from ..serve.hgnn_engine import HGNNEngine, make_request_mix
 
 _BACKENDS = {
@@ -56,7 +57,7 @@ def _target_metapaths(name: str, target: str) -> list[tuple[str, ...]]:
     return [tuple(mp) for mp in dataset_metapaths(name) if mp[0] == target and mp[-1] == target]
 
 
-def serve_mix(graph, target, clusters, args, admission) -> dict:
+def serve_mix(graph, target, clusters, args, admission, registry=None) -> dict:
     eng = HGNNEngine(
         graph,
         target_type=target,
@@ -70,6 +71,7 @@ def serve_mix(graph, target, clusters, args, admission) -> dict:
         backend=_resolve_backend(args.na_backend),
         block=args.block,
         max_edges=args.max_edges,
+        registry=registry,
     )
     for req in make_request_mix(0, clusters, repeats=args.repeats):
         eng.submit(req)
@@ -99,6 +101,16 @@ def main() -> None:
     ap.add_argument("--block", type=int, default=8, help="dst block size for the NA formats")
     ap.add_argument("--max-edges", type=int, default=20_000)
     ap.add_argument("--compare", action="store_true", help="run FIFO vs similarity admission")
+    ap.add_argument(
+        "--trace", default=None, metavar="PATH",
+        help="write a Chrome-trace/Perfetto JSON of the serving run (sync spans: "
+             "serve/step + FP/theta/NA spans, one lane row per slot)",
+    )
+    ap.add_argument(
+        "--metrics", default=None, metavar="PATH",
+        help="write the engine metrics registry (counters, cache gauges, "
+             "per-step latency histogram) as JSON",
+    )
     args = ap.parse_args()
 
     graph = synthetic_hetgraph(args.dataset, scale=args.scale, feat_scale=args.feat_scale, seed=0)
@@ -106,14 +118,30 @@ def main() -> None:
     clusters = [[mp] for mp in _target_metapaths(args.dataset, target)]
     assert clusters, f"{args.dataset}: no target->target metapaths"
 
-    if args.compare:
-        fifo = serve_mix(graph, target, clusters, args, "fifo")
-        sim = serve_mix(graph, target, clusters, args, "similarity")
-        reduction = fifo["fp_rows_computed"] / max(sim["fp_rows_computed"], 1)
-        print(json.dumps(dict(fifo=fifo, similarity=sim,
-                              fp_rows_fifo_over_similarity=reduction), indent=1))
-    else:
-        print(json.dumps(serve_mix(graph, target, clusters, args, args.admission), indent=1))
+    tracer = enable_tracing(sync=True) if args.trace else None
+    # one registry across runs: --compare accumulates both admissions'
+    # counters; gauges reflect the last engine to step
+    reg = MetricsRegistry() if args.metrics else None
+    try:
+        if args.compare:
+            fifo = serve_mix(graph, target, clusters, args, "fifo", registry=reg)
+            sim = serve_mix(graph, target, clusters, args, "similarity", registry=reg)
+            reduction = fifo["fp_rows_computed"] / max(sim["fp_rows_computed"], 1)
+            print(json.dumps(dict(fifo=fifo, similarity=sim,
+                                  fp_rows_fifo_over_similarity=reduction), indent=1))
+        else:
+            print(json.dumps(
+                serve_mix(graph, target, clusters, args, args.admission, registry=reg),
+                indent=1,
+            ))
+    finally:
+        if tracer is not None:
+            tracer.export_chrome_trace(args.trace)
+            disable_tracing()
+            print(f"wrote {args.trace} (open at https://ui.perfetto.dev)", file=sys.stderr)
+    if reg is not None:
+        reg.export_json(args.metrics)
+        print(f"wrote {args.metrics}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -232,3 +232,19 @@ def analyze(hlo_text: str) -> HLOStats:
         dot_flops_static=dflops_static,
         while_trips=trips,
     )
+
+
+def span_attrs(stats: HLOStats, **extra) -> dict:
+    """Flatten an HLOStats into span attributes (obs/trace.py): scalar
+    totals plus per-kind collective bytes, so a compiled program's span in
+    the exported timeline carries its communication/compute footprint."""
+    attrs = dict(
+        dot_flops=stats.dot_flops,
+        collective_bytes=stats.total_collective_bytes,
+        collective_launches=sum(stats.collective_count.values()),
+        while_trips=sum(stats.while_trips),
+    )
+    for kind, b in sorted(stats.collective_bytes.items()):
+        attrs[f"collective_bytes.{kind}"] = b
+    attrs.update(extra)
+    return attrs

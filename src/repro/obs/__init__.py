@@ -1,0 +1,50 @@
+"""Observability subsystem (DESIGN.md §12): span tracing + metrics.
+
+Two pillars:
+
+* ``obs.trace``   — span-based tracer with a near-zero-cost disabled
+  mode, optional ``block_until_ready`` span boundaries, and Chrome-
+  trace/Perfetto + JSONL exporters (one lane row per semantic graph /
+  mesh lane / serving slot).
+* ``obs.metrics`` — process-wide registry of counters, gauges, and
+  log-bucketed histograms with labeled series and JSON snapshots.
+
+``obs.emit`` is the structured line emitter the training loop logs
+through; ``obs.characterize`` (imported explicitly — it pulls in
+``core``) measures the paper's per-stage execution bounds on live runs.
+"""
+from .emit import Emitter
+from .metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    get_registry,
+    reset_registry,
+)
+from .trace import (
+    Span,
+    Tracer,
+    disable_tracing,
+    enable_tracing,
+    get_tracer,
+    trace_span,
+    tracing_enabled,
+)
+
+__all__ = [
+    "Counter",
+    "Emitter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Span",
+    "Tracer",
+    "disable_tracing",
+    "enable_tracing",
+    "get_registry",
+    "get_tracer",
+    "reset_registry",
+    "trace_span",
+    "tracing_enabled",
+]

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from collections import Counter
 from typing import Sequence
 
@@ -50,11 +51,13 @@ from ..core.fusion import (
     batch_semantic_graph,
     neighbor_aggregate_multi,
 )
-from ..core.reuse import FPTraffic
+from ..core.reuse import FPTraffic, fp_buffer_traffic
 from ..core.scheduling import shortest_hamilton_path, similarity_matrix
 from ..graphs.hetgraph import HetGraph
 from ..graphs.sgb import build_semantic_graph
 from ..models.hgnn.common import glorot
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import trace_span
 from .fp_cache import FPCache
 
 
@@ -113,6 +116,7 @@ class HGNNEngine:
         block: int = 16,
         max_edges: int | None = 20_000,
         seed: int = 0,
+        registry: MetricsRegistry | None = None,
     ):
         assert admission in ("similarity", "fifo"), admission
         assert target_type in graph.vertex_counts, target_type
@@ -141,6 +145,17 @@ class HGNNEngine:
         self.fp_rows_naive = 0  # rows a recompute-per-request FP stage would project
         self.fused_steps = 0           # steps served by the FP+NA megakernel
         self.fused_cache_bypasses = 0  # fused steps downgraded: table already cached
+
+        # Observability (DESIGN.md §12).  Each engine owns a private
+        # registry by default so two engines in one process (e.g. the
+        # --compare ablation) never mix series; pass a shared registry to
+        # aggregate.  ``_executed`` records, per step, the stable-unique
+        # tuple of vertex types projected through the cache — the input
+        # the analytical FP-traffic model replays in ``fp_model_drift``.
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self._executed: list[tuple[str, ...]] = []
+        for k in sorted(self._COUNTER_KEYS):  # series exist from step zero
+            self.registry.counter(f"serve.{k}")
 
     # -- parameters ---------------------------------------------------------
 
@@ -252,14 +267,22 @@ class HGNNEngine:
         neither projected nor admitted — the fused path projects the
         target type inside the NA launch instead."""
         tables: dict[str, jnp.ndarray] = {}
-        for _, req in active:
-            mp = req.metapaths[req._progress]
-            for t in dict.fromkeys(mp):
-                self.fp_rows_naive += self.graph.num_vertices(t)
-                if t not in tables and t not in skip:
-                    tables[t] = self.cache.project(
-                        t, self.features[t], self.params["w_fp"][t], self.params["b_fp"][t]
-                    )
+        with trace_span("serve/fp", stage="FP", step=self.steps_run) as sp:
+            for _, req in active:
+                mp = req.metapaths[req._progress]
+                for t in dict.fromkeys(mp):
+                    self.fp_rows_naive += self.graph.num_vertices(t)
+                    if t not in tables and t not in skip:
+                        tables[t] = sp.sync(
+                            self.cache.project(
+                                t,
+                                self.features[t],
+                                self.params["w_fp"][t],
+                                self.params["b_fp"][t],
+                            )
+                        )
+            sp.annotate(types=list(tables))
+        self._executed.append(tuple(tables))
         return tables
 
     def step(self) -> int:
@@ -269,7 +292,16 @@ class HGNNEngine:
         active = [(s, r) for s, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
+        t0 = time.perf_counter()
+        with trace_span("serve/step", step=self.steps_run, slots=len(active)):
+            self._step_body(active)
+        self.registry.histogram("serve.step_ms").observe(
+            (time.perf_counter() - t0) * 1e3
+        )
+        self._sync_registry()
+        return len(active)
 
+    def _step_body(self, active: list[tuple[int, GraphRequest]]) -> None:
         # Bound-aware dispatch for the fused-FP backend: if the cache
         # already holds the target type's whole projected table, FP is a
         # sunk cost — take the projected (multigraph) path and serve the
@@ -281,7 +313,9 @@ class HGNNEngine:
             backend = _FUSED_TO_MULTIGRAPH[backend]
             fused = False
             self.fused_cache_bypasses += 1
+            self.registry.counter("serve.fused_cache_bypasses").inc()
 
+        graph_names = ["/".join(r.metapaths[r._progress]) for _, r in active]
         if fused:
             self._fp_tables(active, skip={self.target_type})
             batches, a_s, a_d = [], [], []
@@ -298,47 +332,69 @@ class HGNNEngine:
                 jnp.stack(a_s),
                 jnp.stack(a_d),
             )
-            z_all = neighbor_aggregate_multi(
-                batches, None, None, None, backend=backend, fp=fp
-            )  # [G_active, N, H, Dh]
+            with trace_span(
+                "serve/na", stage="NA", backend=backend.value,
+                graphs=len(active), graph_names=graph_names, fused_fp=True,
+            ) as sp:
+                z_all = sp.sync(
+                    neighbor_aggregate_multi(
+                        batches, None, None, None, backend=backend, fp=fp
+                    )
+                )  # [G_active, N, H, Dh]
             self.fused_steps += 1
+            self.registry.counter("serve.fused_steps").inc()
         else:
             tables = self._fp_tables(active)
             hh = tables[self.target_type].reshape(self.n_target, self.heads, self.hidden)
 
             batches, th_s, th_d = [], [], []
-            for _, req in active:
-                mp = req.metapaths[req._progress]
-                a_src, a_dst = self._metapath_params(mp)
-                ts, td = stages.attention_coefficients(hh, a_src, a_dst)
-                batches.append(self._batch(mp))
-                th_s.append(ts)
-                th_d.append(td)
-            z_all = neighbor_aggregate_multi(
-                batches, jnp.stack(th_s), jnp.stack(th_d), hh, backend=backend
-            )  # [G_active, N, H, Dh]
+            with trace_span("serve/theta", stage="theta", graphs=len(active)) as sp:
+                for _, req in active:
+                    mp = req.metapaths[req._progress]
+                    a_src, a_dst = self._metapath_params(mp)
+                    ts, td = stages.attention_coefficients(hh, a_src, a_dst)
+                    batches.append(self._batch(mp))
+                    th_s.append(sp.sync(ts))
+                    th_d.append(sp.sync(td))
+            with trace_span(
+                "serve/na", stage="NA", backend=backend.value,
+                graphs=len(active), graph_names=graph_names,
+            ) as sp:
+                z_all = sp.sync(
+                    neighbor_aggregate_multi(
+                        batches, jnp.stack(th_s), jnp.stack(th_d), hh, backend=backend
+                    )
+                )  # [G_active, N, H, Dh]
         self.na_launches += 1
+        self.registry.counter("serve.na_launches").inc()
 
         valid = jnp.ones((self.n_target,), bool)
         for i, (s, req) in enumerate(active):
-            z = jax.nn.elu(z_all[i].reshape(self.n_target, -1))
-            w_p = stages.local_semantic_fusion(
-                z, self.params["w_g"], self.params["b_g"], self.params["q"], valid
-            )
-            req._z.append(z)
-            req._w.append(w_p)
-            req._progress += 1
-            if req.done:
-                fused, beta = stages.global_semantic_fusion(
-                    jnp.stack(req._w), jnp.stack(req._z)
+            with trace_span(
+                f"serve/fa/slot{s}", stage="FA", lane=f"slot{s}",
+                rid=req.rid, graph=graph_names[i],
+            ) as sp:
+                z = jax.nn.elu(z_all[i].reshape(self.n_target, -1))
+                w_p = sp.sync(
+                    stages.local_semantic_fusion(
+                        z, self.params["w_g"], self.params["b_g"], self.params["q"], valid
+                    )
                 )
-                req.result, req.beta = fused, beta
-                req._z, req._w = [], []
-                req.finished_step = self.steps_run
-                self.finished.append(req)
-                self.slots[s] = None
+                req._z.append(z)
+                req._w.append(w_p)
+                req._progress += 1
+                if req.done:
+                    fused_z, beta = stages.global_semantic_fusion(
+                        jnp.stack(req._w), jnp.stack(req._z)
+                    )
+                    req.result, req.beta = sp.sync(fused_z), beta
+                    req._z, req._w = [], []
+                    req.finished_step = self.steps_run
+                    self.finished.append(req)
+                    self.slots[s] = None
+                    self.registry.counter("serve.requests_finished").inc()
         self.steps_run += 1
-        return len(active)
+        self.registry.counter("serve.steps").inc()
 
     def run(self, max_steps: int = 10_000) -> list[GraphRequest]:
         steps = 0
@@ -364,6 +420,48 @@ class HGNNEngine:
         """Measured FP traffic in ``core/reuse.py``'s own accounting type."""
         return self.cache.stats.traffic()
 
+    def fp_model_drift(self) -> dict:
+        """Predicted-vs-measured FP traffic: replay the executed per-step
+        type sets through ``core/reuse.py:fp_buffer_traffic`` (LRU buffer
+        = this cache's capacity) and compare fetched bytes against what
+        the block-granular cache actually fetched.  ``drift`` is
+        measured/modeled fetched bytes — 1.0 means the paper's analytical
+        FP-Buf model predicts the live traffic exactly; block-granular
+        partial hits and similarity eviction push it below 1.0."""
+        out_bytes = self.heads * self.hidden * 4  # f32 projected row
+
+        class _Step:
+            def __init__(self, pt):
+                self.path_types = pt
+
+        sgs = [_Step(pt) for pt in self._executed]
+        model = fp_buffer_traffic(
+            list(range(len(sgs))),
+            sgs,
+            self.graph.vertex_counts,
+            bytes_per_vertex={t: out_bytes for t in self.graph.vertex_counts},
+            fpbuf_bytes=self.cache.capacity_bytes,
+        )
+        measured = self.traffic()
+        return dict(
+            fp_model_fetched_bytes=model.fetched_bytes,
+            fp_model_reused_bytes=model.reused_bytes,
+            fp_measured_fetched_bytes=measured.fetched_bytes,
+            fp_model_drift=measured.fetched_bytes / max(model.fetched_bytes, 1),
+        )
+
+    # counters maintained monotonically at event sites in step(); every
+    # other metrics() key is mirrored into the registry as a gauge.
+    _COUNTER_KEYS = frozenset(
+        ("steps", "na_launches", "requests_finished", "fused_steps",
+         "fused_cache_bypasses")
+    )
+
+    def _sync_registry(self) -> None:
+        for k, v in self.metrics().items():
+            if k not in self._COUNTER_KEYS:
+                self.registry.gauge(f"serve.{k}").set(float(v))
+
     def metrics(self) -> dict:
         st = self.cache.stats
         return dict(
@@ -386,6 +484,7 @@ class HGNNEngine:
             fused_cache_bypasses=self.fused_cache_bypasses,
             cache_resident_bytes=self.cache.resident_bytes,
             cache_capacity_bytes=self.cache.capacity_bytes,
+            **self.fp_model_drift(),
         )
 
 

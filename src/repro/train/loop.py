@@ -18,6 +18,9 @@ import numpy as np
 
 from ..checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from ..data.pipeline import SyntheticLMData
+from ..obs.emit import Emitter
+from ..obs.metrics import MetricsRegistry, get_registry
+from ..obs.trace import trace_span
 from .step import TrainState
 
 
@@ -33,8 +36,26 @@ def train_loop(
     crash_at: int | None = None,  # fault-injection hook for tests
     log_every: int = 10,
     log: Callable[[str], None] = print,
+    log_jsonl: str | None = None,  # mirror structured records to a JSONL file
+    registry: MetricsRegistry | None = None,
     state_shardings=None,  # elastic restart: place restored leaves on THIS mesh
 ) -> tuple[TrainState, list[dict]]:
+    """Run ``steps`` train steps with checkpointing and structured logging.
+
+    Observability (DESIGN.md §12): every step increments ``train.steps``
+    and lands its wall time in the ``train.step_ms`` histogram; logged
+    steps additionally set the ``train.loss``/``train.grad_norm`` gauges
+    and emit a structured ``[train] step=… loss=… sec=…`` record through
+    :class:`Emitter` (``log=`` stays the injectable sink).  Per-step
+    ``sec`` on logged steps includes the device sync the host-side metric
+    conversion forces; between log points it is dispatch wall time —
+    enable tracing (sync spans) for honest per-step device timing.
+    """
+    reg = registry if registry is not None else get_registry()
+    em = Emitter(sink=log, jsonl_path=log_jsonl)
+    step_ms = reg.histogram("train.step_ms")
+    steps_c = reg.counter("train.steps")
+
     start = 0
     if ckpt_dir and resume:
         last = latest_step(ckpt_dir)
@@ -47,24 +68,40 @@ def train_loop(
             )
             data.restore(aux["data"])
             start = last
-            log(f"[resume] restored step {last}")
+            em.emit("resume", step=last)
 
     history: list[dict] = []
     jitted = jax.jit(train_step)
-    for step in range(start, steps):
-        if crash_at is not None and step == crash_at:
-            raise RuntimeError(f"injected failure at step {step}")
-        t0 = time.perf_counter()
-        batch = data.next()
-        state, metrics = jitted(state, batch)
-        if step % log_every == 0 or step == steps - 1:
-            m = {k: float(np.asarray(v)) for k, v in metrics.items()}
-            m["step"] = step
-            m["sec"] = time.perf_counter() - t0
-            history.append(m)
-            log(f"[train] step={step} loss={m['loss']:.4f} gnorm={m['grad_norm']:.3f}")
-        if ckpt_dir and (step + 1) % ckpt_every == 0:
-            save_checkpoint(ckpt_dir, step + 1, state, aux={"data": data.state()})
-    if ckpt_dir:
-        save_checkpoint(ckpt_dir, steps, state, aux={"data": data.state()})
+    try:
+        for step in range(start, steps):
+            if crash_at is not None and step == crash_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            batch = data.next()
+            with trace_span("train/step", step=step) as sp:
+                state, metrics = jitted(state, batch)
+                sp.sync(metrics)
+            dt = time.perf_counter() - t0
+            if step % log_every == 0 or step == steps - 1:
+                m = {k: float(np.asarray(v)) for k, v in metrics.items()}
+                m["step"] = step
+                dt = m["sec"] = time.perf_counter() - t0  # includes the sync above
+                history.append(m)
+                reg.gauge("train.loss").set(m["loss"])
+                reg.gauge("train.grad_norm").set(m["grad_norm"])
+                em.emit(
+                    "train",
+                    step=step,
+                    loss=m["loss"],
+                    gnorm=m["grad_norm"],
+                    sec=dt,
+                )
+            step_ms.observe(dt * 1e3)
+            steps_c.inc()
+            if ckpt_dir and (step + 1) % ckpt_every == 0:
+                save_checkpoint(ckpt_dir, step + 1, state, aux={"data": data.state()})
+        if ckpt_dir:
+            save_checkpoint(ckpt_dir, steps, state, aux={"data": data.state()})
+    finally:
+        em.close()
     return state, history
